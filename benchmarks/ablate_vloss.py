@@ -1,0 +1,51 @@
+"""Ablation: virtual-loss rounds — the TPU analogue of the paper's locks.
+
+With W lanes selecting against one tree snapshot, simultaneous selections
+collide (search overhead — the phenomenon the paper handles with local
+locks + atomic w/n; DESIGN.md §2 maps it to virtual-loss rounds R).
+R=1 is maximally parallel (most collisions); R=W degenerates toward
+sequential selection (none). The ablation measures search QUALITY at a
+fixed playout budget: tree size (diversity) and root-child coverage vs R,
+plus throughput cost per round.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import hex as hx
+from repro.core.gscpm import GSCPMConfig, gscpm_search
+
+
+def run(n_playouts: int = 1024, n_workers: int = 16, board_size: int = 9,
+        rounds=(1, 2, 4, 8), seed: int = 0) -> dict:
+    spec = hx.HexSpec(board_size)
+    board = hx.empty_board(spec)
+    key = jax.random.key(seed)
+    out = {}
+    for r in rounds:
+        cfg = GSCPMConfig(board_size=board_size, n_playouts=n_playouts,
+                          n_tasks=64, n_workers=n_workers, vl_rounds=r,
+                          tree_cap=1 << 14, scheduler="fifo")
+        gscpm_search(board, 1, cfg, key)            # warm-up
+        tree, st = gscpm_search(board, 1, cfg, key)
+        import numpy as np
+        n_root = int(tree.n_children[0])
+        out[str(r)] = {
+            "tree_nodes": st["tree_nodes"],
+            "root_children": n_root,
+            "playouts_per_s": st["playouts_per_s"],
+            "root_value": st["root_value"],
+            "best_move": st["best_move"],
+        }
+    return {"n_playouts": n_playouts, "n_workers": n_workers,
+            "rounds": list(rounds), "results": out}
+
+
+if __name__ == "__main__":
+    import json
+
+    from benchmarks.common import save_result
+    r = run()
+    print(json.dumps(r, indent=1))
+    save_result("ablate_vloss", r)

@@ -1,0 +1,28 @@
+"""Shared benchmark harness utilities."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+def save_result(name: str, payload: dict) -> str:
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return os.path.abspath(path)
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    """(min wall seconds, last result) over `repeats` calls."""
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return best, out

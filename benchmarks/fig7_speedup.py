@@ -1,0 +1,75 @@
+"""Paper Fig 7/8 — GSCPM speedup vs nTasks, per scheduling discipline.
+
+The paper's axes: x = nTasks (grain), y = speedup over sequential, one
+curve per threading library. Our TPU-native mapping (DESIGN.md §2): one
+curve per scheduler discipline x lane width; "speedup" is playout
+throughput relative to the sequential searcher on the same host. The
+qualitative reproduction targets:
+
+  (1) speedup rises with nTasks until tasks ~ saturate the lanes
+      (coarse-grain starvation, Table I top row),
+  (2) too-fine grains pay per-round dispatch overhead (Table I bottom row),
+  (3) plain FIFO work-sharing is equal-or-better than the rebalancing
+      (stealing-analogue) discipline — the paper's headline surprise,
+  (4) one-task-per-core underperforms grain-size control (the paper's 31x
+      vs 47x on the Phi).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import hex as hx
+from repro.core.gscpm import GSCPMConfig, gscpm_search
+from repro.core.mcts import uct_search
+
+
+def run(n_playouts: int = 2048, n_workers: int = 16, board_size: int = 9,
+        task_sweep=(4, 8, 16, 32, 64, 128, 256, 512),
+        schedulers=("fifo", "rebalance", "one_per_core"),
+        seed: int = 0) -> dict:
+    spec = hx.HexSpec(board_size)
+    board = hx.empty_board(spec)
+    key = jax.random.key(seed)
+    tree_cap = max(1 << 14, 4 * n_playouts)
+
+    # sequential baseline (warm-up excluded, as in the paper)
+    uct_search(board, 1, 64, key, board_size=board_size, tree_cap=tree_cap)
+    _, seq = uct_search(board, 1, n_playouts, key, board_size=board_size,
+                        tree_cap=tree_cap)
+    seq_rate = seq["playouts_per_s"]
+
+    curves: dict[str, dict] = {}
+    for sched in schedulers:
+        pts = {}
+        sweep = [n_workers] if sched == "one_per_core" else task_sweep
+        for n_tasks in sweep:
+            cfg = GSCPMConfig(
+                board_size=board_size, n_playouts=n_playouts,
+                n_tasks=n_tasks, n_workers=n_workers, tree_cap=tree_cap,
+                scheduler=sched)
+            gscpm_search(board, 1, cfg, key)          # warm-up/compile
+            _, st = gscpm_search(board, 1, cfg, key)
+            pts[str(n_tasks)] = {
+                "speedup": st["playouts_per_s"] / seq_rate,
+                "playouts_per_s": st["playouts_per_s"],
+                "masked_lane_fraction": st["masked_lane_fraction"],
+                "tree_nodes": st["tree_nodes"],
+            }
+        curves[sched] = pts
+    return {
+        "n_playouts": n_playouts,
+        "n_workers": n_workers,
+        "board": f"{board_size}x{board_size}",
+        "sequential_playouts_per_s": seq_rate,
+        "curves": curves,
+    }
+
+
+if __name__ == "__main__":
+    import json
+
+    from benchmarks.common import save_result
+    r = run()
+    print(json.dumps(r, indent=1))
+    save_result("fig7_speedup", r)

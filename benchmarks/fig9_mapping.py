@@ -1,0 +1,61 @@
+"""Paper Fig 9 — measured GSCPM speedup overlaid on the Cilkview bound.
+
+Runs the Fig 7 measurement for the FIFO discipline and compares each point
+against the analytic work/span bound with a dispatch burden fitted from the
+measured per-round overhead — reproducing the paper's observation that
+measured speedup tracks the bound up to ~256 tasks and then departs due to
+scheduling overheads.
+"""
+
+from __future__ import annotations
+
+from repro.core.cilkview import DagModel, speedup_bound
+
+from benchmarks import fig7_speedup
+
+
+def run(n_playouts: int = 2048, n_workers: int = 16,
+        board_size: int = 9) -> dict:
+    measured = fig7_speedup.run(
+        n_playouts=n_playouts, n_workers=n_workers, board_size=board_size,
+        schedulers=("fifo",))
+    seq_rate = measured["sequential_playouts_per_s"]
+    t_iter = 1.0
+    # fit the per-round dispatch burden from the finest-grain point
+    pts = measured["curves"]["fifo"]
+    finest = max(int(t) for t in pts)
+    meas_fine = pts[str(finest)]["speedup"]
+    grain = max(1, n_playouts // finest)
+    # solve burden so bound(finest) == measured(finest)
+    import math
+    rounds = math.ceil(finest / n_workers)
+    t1 = finest * grain
+    tinf = grain + finest * 0.002
+    tp_needed = t1 / max(meas_fine, 1e-9)
+    t_round = max(0.0, (tp_needed - max(t1 / n_workers, tinf)) / rounds)
+
+    model = DagModel(t_iter=t_iter, t_spawn=0.002, t_round=t_round)
+    overlay = {}
+    for t_str, p in pts.items():
+        t = int(t_str)
+        g = max(1, n_playouts // t)
+        overlay[t_str] = {
+            "measured": p["speedup"],
+            "bound": speedup_bound(t, g, n_workers, model),
+        }
+    return {
+        "n_playouts": n_playouts,
+        "n_workers": n_workers,
+        "fitted_t_round": t_round,
+        "sequential_playouts_per_s": seq_rate,
+        "overlay": overlay,
+    }
+
+
+if __name__ == "__main__":
+    import json
+
+    from benchmarks.common import save_result
+    r = run()
+    print(json.dumps(r, indent=1))
+    save_result("fig9_mapping", r)

@@ -1,0 +1,88 @@
+"""Kernel microbenches: correctness sweeps + CPU-host timing of the oracles.
+
+Interpret-mode Pallas timings are meaningless (Python-interpreted kernel
+bodies), so on this host we (a) re-assert kernel==oracle across a sweep and
+(b) time the XLA oracle as the reference throughput; TPU wall-clock numbers
+belong to the §Perf iteration on real hardware.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from benchmarks.common import timed
+
+
+def run(seed: int = 0) -> dict:
+    key = jax.random.key(seed)
+    out: dict[str, dict] = {}
+
+    # flash attention
+    fa = {}
+    for (B, H, Hkv, S, d) in [(1, 4, 2, 256, 64), (1, 8, 8, 512, 64)]:
+        ks = jax.random.split(jax.random.fold_in(key, S), 3)
+        q = jax.random.normal(ks[0], (B, H, S, d), jnp.float32)
+        k = jax.random.normal(ks[1], (B, Hkv, S, d), jnp.float32)
+        v = jax.random.normal(ks[2], (B, Hkv, S, d), jnp.float32)
+        got = ops.flash_attention(q, k, v, causal=True, layout="bhsd")
+        want = ref.flash_attention(q, k, v, causal=True)
+        err = float(jnp.max(jnp.abs(got - want)))
+        oracle = jax.jit(lambda q, k, v: ref.flash_attention(q, k, v, True))
+        jax.block_until_ready(oracle(q, k, v))
+        t, _ = timed(lambda: jax.block_until_ready(oracle(q, k, v)),
+                     repeats=3)
+        flops = 4 * B * H * S * S * d
+        fa[f"B{B}H{H}S{S}d{d}"] = {"max_err": err, "oracle_s": t,
+                                   "oracle_gflops": flops / t / 1e9}
+    out["flash_attention"] = fa
+
+    # uct_select
+    us = {}
+    for (W, C) in [(128, 128), (1024, 128)]:
+        ks = jax.random.split(jax.random.fold_in(key, W + C), 4)
+        visits = jnp.round(jax.random.uniform(ks[0], (W, C)) * 50)
+        wins = jnp.round(jax.random.uniform(ks[1], (W, C)) * visits)
+        vloss = jnp.zeros((W, C))
+        valid = jax.random.uniform(ks[2], (W, C)) > 0.2
+        ptot = jnp.maximum(visits.sum(-1), 1.0)
+        got = ops.uct_select(wins, visits, vloss, ptot, valid, 1.0)
+        want = ref.uct_select(wins, visits, vloss, ptot, valid, 1.0)
+        agree = float((got == want).mean())
+        oracle = jax.jit(lambda *a: ref.uct_select(*a, 1.0))
+        jax.block_until_ready(oracle(wins, visits, vloss, ptot, valid))
+        t, _ = timed(lambda: jax.block_until_ready(
+            oracle(wins, visits, vloss, ptot, valid)), repeats=3)
+        us[f"W{W}C{C}"] = {"agreement": agree, "oracle_s": t,
+                           "selections_per_s": W / t}
+    out["uct_select"] = us
+
+    # rmsnorm
+    rn = {}
+    for shape in [(4096, 1024), (256, 8192)]:
+        x = jax.random.normal(jax.random.fold_in(key, shape[1]), shape,
+                              jnp.float32)
+        w = jnp.ones((shape[-1],), jnp.float32)
+        got = ops.rmsnorm(x, w)
+        want = ref.rmsnorm(x, w)
+        err = float(jnp.max(jnp.abs(got - want)))
+        oracle = jax.jit(lambda x, w: ref.rmsnorm(x, w))
+        jax.block_until_ready(oracle(x, w))
+        t, _ = timed(lambda: jax.block_until_ready(oracle(x, w)), repeats=3)
+        gb = 2 * x.size * 4 / 1e9
+        rn[f"{shape[0]}x{shape[1]}"] = {"max_err": err, "oracle_s": t,
+                                        "oracle_gbps": gb / t}
+    out["rmsnorm"] = rn
+    return out
+
+
+if __name__ == "__main__":
+    import json
+
+    from benchmarks.common import save_result
+    r = run()
+    print(json.dumps(r, indent=1))
+    save_result("kernels_micro", r)

@@ -1,0 +1,100 @@
+"""Fill EXPERIMENTS.md placeholders from artifacts (dryrun + perf)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.roofline_table import fmt_s, load_cells, render
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def dryrun_summary(cells) -> str:
+    ok = [c for c in cells if "error" not in c]
+    single = [c for c in ok if c["mesh"] == "single"]
+    multi = [c for c in ok if c["mesh"] == "multipod"]
+    fits = sum(1 for c in single if c["memory"]["fits_16GiB"])
+    worst = sorted(single, key=lambda c: -c["memory"]["peak_bytes_per_chip"])[:3]
+    lines = [
+        f"- **{len(single)}/32 single-pod cells** lower + compile on the "
+        f"16×16 mesh; **{len(multi)}/32 multi-pod cells** on 2×16×16 "
+        "(the pod axis shards; gradient all-reduce crosses pods).",
+        f"- {fits}/{len(single)} single-pod cells fit 16 GiB/chip at the "
+        "baseline configuration; the exceptions are hillclimbed in §Perf:",
+    ]
+    for c in worst:
+        lines.append(
+            f"  - {c['arch']} {c['shape']}: "
+            f"{c['memory']['peak_bytes_per_chip']/2**30:.2f} GiB"
+            + (" (fits)" if c["memory"]["fits_16GiB"] else " (over budget)"))
+    lines.append(
+        "- per-cell JSON (memory breakdown, collective-by-op wire bytes, "
+        "while-loop trip counts, compile times) in `artifacts/dryrun/`.")
+    return "\n".join(lines)
+
+
+def roofline_notes(cells) -> str:
+    single = [c for c in cells if c.get("mesh") == "single" and "error" not in c]
+    n_mem = sum(1 for c in single if c["roofline"]["bottleneck"] == "memory")
+    n_coll = sum(1 for c in single if c["roofline"]["bottleneck"] == "collective")
+    n_comp = len(single) - n_mem - n_coll
+    return f"""Reading the table ({n_mem} memory-bound, {n_coll} collective-bound,
+{n_comp} compute-bound cells):
+
+- **decode cells are memory-bound everywhere** — intrinsic: one token per
+  step reads all (active) weights + the KV cache; MFU is the wrong lens
+  for decode, step-time (the memory term) is the score.
+- **big-model train cells are collective-bound** at baseline: the wire
+  breakdown (JSON `collectives.by_op`) shows the Megatron-SP block-edge
+  activation all-gathers and the MoE combine all-reduces dominating, NOT
+  the FSDP weight gathers (measured; see §Perf, hypothesis A1 refuted).
+- the `useful` column (6·N·D / parsed HLO FLOPs) sits at 45-75% for train
+  cells — the gap is attention FLOPs (reported separately in the JSON),
+  remat recompute (~1.33x), and replicated compute on unshardable head
+  counts (smollm's 9 heads, paligemma's 8 over a 16-way model axis).
+- each cell's JSON carries a one-line improvement note candidate: the
+  dominant term's biggest contributor from the per-op breakdown."""
+
+
+def perf_log() -> str:
+    runs = {}
+    for path in glob.glob(os.path.join(ROOT, "artifacts", "perf", "*.json")):
+        with open(path) as f:
+            runs[os.path.basename(path)[:-5]] = json.load(f)
+
+    def row(tag):
+        r = runs[tag]["roofline"]
+        m = runs[tag]["memory"]
+        return (f"| {tag} | {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
+                f"| {fmt_s(r['collective_s'])} | "
+                f"{m['peak_bytes_per_chip']/2**30:.2f} | "
+                f"{r['mfu']*100:.2f}% |")
+
+    hdr = ("| experiment | compute | memory | collective | peak GiB | MFU |\n"
+           "|---|---|---|---|---|---|")
+    out = [hdr]
+    for tag in sorted(runs):
+        out.append(row(tag))
+    return "\n".join(out)
+
+
+def main():
+    cells = load_cells()
+    exp_path = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(exp_path) as f:
+        text = f.read()
+    text = text.replace("<!-- DRYRUN_SUMMARY -->", dryrun_summary(cells))
+    text = text.replace("<!-- ROOFLINE_TABLE -->", render(cells, "single"))
+    text = text.replace("<!-- ROOFLINE_NOTES -->", roofline_notes(cells))
+    with open(exp_path, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md placeholders filled "
+          f"({len([c for c in cells if 'error' not in c])} cells, "
+          f"{len(glob.glob(os.path.join(ROOT, 'artifacts/perf/*.json')))} "
+          "perf runs)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Render the §Roofline table from the dry-run artifacts.
+
+Reads artifacts/dryrun/*.json (written by repro.launch.dryrun) and emits
+the per-(arch x shape x mesh) markdown table EXPERIMENTS.md embeds: the
+three terms in seconds, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs,
+peak bytes/chip.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                          "dryrun")
+
+
+def load_cells(dryrun_dir: str = DRYRUN_DIR) -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def render(cells: list[dict], mesh: str = "single") -> str:
+    rows = [
+        "| arch | shape | compute | memory | collective | bottleneck | "
+        "MFU | useful (6ND/HLO) | peak GiB/chip |",
+        "|------|-------|---------|--------|------------|------------|"
+        "-----|------------------|---------------|",
+    ]
+    for c in cells:
+        if c.get("mesh") != mesh or "error" in c:
+            continue
+        r = c["roofline"]
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"{r['bottleneck']} | {r['mfu']*100:.1f}% | "
+            f"{r['useful_ratio']*100:.1f}% | "
+            f"{c['memory']['peak_bytes_per_chip']/2**30:.2f} |")
+    return "\n".join(rows)
+
+
+def run() -> dict:
+    cells = load_cells()
+    ok = [c for c in cells if "error" not in c]
+    return {
+        "n_cells": len(cells),
+        "n_ok": len(ok),
+        "table_single": render(cells, "single"),
+        "table_multipod": render(cells, "multipod"),
+    }
+
+
+if __name__ == "__main__":
+    r = run()
+    print(f"{r['n_ok']}/{r['n_cells']} cells\n")
+    print(r["table_single"])

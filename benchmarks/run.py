@@ -1,0 +1,94 @@
+"""Benchmark aggregator: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Runs one benchmark per paper table/figure (CPU-scaled budgets), the kernel
+microbenches, and the roofline-table render; writes JSON artifacts to
+artifacts/bench/ and prints a summary. Pass --full for the larger budgets.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+import traceback
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true",
+                   help="larger playout budgets (several minutes)")
+    p.add_argument("--only", default=None,
+                   help="comma-separated subset, e.g. table2,fig7")
+    args = p.parse_args()
+
+    from benchmarks import (ablate_vloss, fig5_cilkview, fig7_speedup,
+                            fig9_mapping, kernels_micro, roofline_table,
+                            table2_sequential)
+    from benchmarks.common import save_result
+
+    n_po = 8192 if args.full else 1024
+    jobs = {
+        "table2_sequential": lambda: table2_sequential.run(n_playouts=n_po),
+        "fig5_cilkview": lambda: fig5_cilkview.run(),
+        "fig7_speedup": lambda: fig7_speedup.run(
+            n_playouts=n_po, n_workers=16,
+            task_sweep=(4, 8, 16, 32, 64, 128, 256, 512) if args.full
+            else (4, 16, 64, 256)),
+        "fig9_mapping": lambda: fig9_mapping.run(n_playouts=n_po),
+        "kernels_micro": lambda: kernels_micro.run(),
+        "ablate_vloss": lambda: ablate_vloss.run(n_playouts=n_po),
+        "roofline_table": lambda: roofline_table.run(),
+    }
+    if args.only:
+        keep = {k.strip() for k in args.only.split(",")}
+        jobs = {k: v for k, v in jobs.items() if any(s in k for s in keep)}
+
+    failures = []
+    for name, job in jobs.items():
+        t0 = time.perf_counter()
+        print(f"=== {name} ===", flush=True)
+        try:
+            res = job()
+            path = save_result(name, res)
+            print(json.dumps(_summ(name, res), indent=1))
+            print(f"[{name}] ok in {time.perf_counter()-t0:.1f}s -> {path}\n",
+                  flush=True)
+        except Exception as e:
+            failures.append(name)
+            print(f"[{name}] FAILED: {type(e).__name__}: {e}")
+            traceback.print_exc()
+    print("benchmarks complete;",
+          f"{len(jobs) - len(failures)}/{len(jobs)} ok",
+          ("FAILED: " + ", ".join(failures)) if failures else "")
+    raise SystemExit(1 if failures else 0)
+
+
+def _summ(name: str, res: dict) -> dict:
+    """Console-sized digest per benchmark."""
+    if name == "table2_sequential":
+        return {k: res[k] for k in ("n_playouts", "time_s", "per_playout_us",
+                                    "extrapolated_paper_budget_s")}
+    if name == "fig5_cilkview":
+        b = res["speedup_bounds"]
+        i61 = res["core_counts"].index(61)
+        return {"bound_61c_16384t": b["16384"][i61],
+                "bound_61c_64t": b["64"][i61]}
+    if name == "fig7_speedup":
+        return {s: {t: round(p["speedup"], 2) for t, p in pts.items()}
+                for s, pts in res["curves"].items()}
+    if name == "fig9_mapping":
+        return {t: {k: round(v, 2) for k, v in o.items()}
+                for t, o in res["overlay"].items()}
+    if name == "kernels_micro":
+        return {k: list(v) for k, v in res.items()}
+    if name == "ablate_vloss":
+        return {r: {"tree_nodes": v["tree_nodes"],
+                    "playouts_per_s": round(v["playouts_per_s"])}
+                for r, v in res["results"].items()}
+    if name == "roofline_table":
+        return {"n_ok": res["n_ok"], "n_cells": res["n_cells"]}
+    return {}
+
+
+if __name__ == "__main__":
+    main()

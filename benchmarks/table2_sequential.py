@@ -1,0 +1,45 @@
+"""Paper Table II — sequential baseline time.
+
+The paper: 1,048,576 playouts of 11x11 Hex, sequential, on Xeon CPU
+(21.47 s) and Xeon Phi (185.37 s). Here: the same sequential UCT search on
+this host at a scaled playout budget; we report per-playout time and the
+extrapolated full-budget time. The absolute numbers are hardware-specific
+(documented in EXPERIMENTS.md); the deliverable is the baseline every
+speedup in Fig 7/8 is measured against.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.configs.hex_paper import PAPER
+from repro.core import hex as hx
+from repro.core.mcts import uct_search
+
+
+def run(n_playouts: int = 2048, board_size: int = 11, seed: int = 0) -> dict:
+    spec = hx.HexSpec(board_size)
+    board = hx.empty_board(spec)
+    # warm-up game (paper: first game excluded — jit warm-up here)
+    uct_search(board, 1, 64, jax.random.key(seed + 1), cp=PAPER.cp,
+               tree_cap=1 << 14)
+    tree, stats = uct_search(board, 1, n_playouts, jax.random.key(seed),
+                             cp=PAPER.cp, tree_cap=max(1 << 14, n_playouts * 2))
+    per_playout = stats["time_s"] / n_playouts
+    return {
+        "board": f"{board_size}x{board_size}",
+        "n_playouts": n_playouts,
+        "time_s": stats["time_s"],
+        "per_playout_us": per_playout * 1e6,
+        "extrapolated_paper_budget_s": per_playout * PAPER.n_playouts,
+        "paper_xeon_s": 21.47,
+        "paper_phi_s": 185.37,
+        "tree_nodes": stats["tree_nodes"],
+    }
+
+
+if __name__ == "__main__":
+    from benchmarks.common import save_result
+    r = run()
+    print(json.dumps(r, indent=1) if (json := __import__("json")) else r)
+    save_result("table2_sequential", r)

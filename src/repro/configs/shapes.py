@@ -1,0 +1,74 @@
+"""Assigned input shapes and per-(arch × shape) applicability.
+
+Four LM shapes per architecture (40 cells total):
+
+    train_4k      seq_len=4,096   global_batch=256   -> lowers train_step
+    prefill_32k   seq_len=32,768  global_batch=32    -> lowers prefill_step
+    decode_32k    seq_len=32,768  global_batch=128   -> lowers serve_step
+    long_500k     seq_len=524,288 global_batch=1     -> lowers serve_step
+
+``decode_*`` / ``long_*`` lower one-new-token serve steps against a KV cache
+of ``seq_len``. ``long_500k`` needs sub-quadratic attention and is skipped
+for pure full-attention architectures (DESIGN.md §5); it runs for the
+SSM/hybrid archs (zamba2, xlstm) whose decode state is O(1)/O(L).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+# families whose decode-time attention state is sub-quadratic in seq_len
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid", "xlstm")
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) for one (arch × shape) cell."""
+    if shape.name == "long_500k" and cfg.family not in SUBQUADRATIC_FAMILIES:
+        return False, "skip(full-attn): 500k KV decode needs sub-quadratic attention"
+    return True, ""
+
+
+def tune_for_shape(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    """Shape-driven memory knobs so the BASELINE cell fits 16 GB/chip.
+
+    These are fit-the-machine settings (remat, chunked CE, q-chunked
+    attention), not hillclimb optimizations; §Perf iterates beyond them.
+    """
+    kw: dict = {}
+    if shape.kind == "train":
+        # chunked CE keeps live logits at chunk x vocab (152k-vocab archs
+        # would otherwise materialize ~0.6 TB of logits per step)
+        kw["logits_chunk"] = 512
+        # full remat + q-chunked attention: unremat'd (B,H,S,S) fp32 scores
+        # are ~10 GB/chip/layer at 4k even for the small archs
+        kw["remat"] = "full"
+        if shape.seq_len >= 2048:
+            kw["attn_chunk"] = 512
+    if shape.kind == "prefill" and shape.seq_len >= 8_192:
+        kw["attn_chunk"] = 1024  # bound live scores to (B,H,chunk,S);
+        # applies to every family with any attention (incl. hybrid's shared
+        # blocks, the VLM prefix path and the enc-dec decoder)
+        kw["remat"] = "full" if cfg.d_model >= 2048 else cfg.remat
+    return cfg.replace(**kw) if kw else cfg

@@ -1,0 +1,317 @@
+"""GSCPM — Grain-Size Controlled Parallel MCTS (paper Fig 4), TPU-native.
+
+The paper splits ``nPlayouts`` UCT iterations into ``nTasks`` tasks of grain
+``m = nPlayouts / nTasks`` and schedules them on a thread pool against one
+shared tree. Here (DESIGN.md §2):
+
+- a *lane* (vmapped worker) plays the role of a hardware thread;
+- a *task* is an ``m``-iteration chunk executed as a ``lax.fori_loop`` of
+  batch-synchronous iterations;
+- a *sync iteration* selects W leaves (in ``vl_rounds`` virtual-loss rounds),
+  dedup-expands the proposed (leaf, move) pairs with prefix-sum slot
+  allocation (the paper's atomic child index), runs W playouts, and
+  scatter-adds the results along the W paths (the paper's atomic w_j/n_j);
+- per-task RNG streams come from ``fold_in`` (the paper's per-task MKL
+  streams).
+
+Grain size trades scheduling overhead against parallel width exactly as in
+the paper's Table I; the scheduling disciplines live in
+``repro.core.scheduler``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hex as hx
+from repro.core import scheduler as sched
+from repro.core import uct as uct_mod
+from repro.core.tree import (
+    NO_NODE,
+    Tree,
+    add_vloss,
+    backup_paths,
+    best_child,
+    init_tree,
+    reset_vloss,
+    root_value,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class GSCPMConfig:
+    """Knobs of the paper's experiment grid + the TPU-specific ones."""
+
+    board_size: int = 11
+    n_playouts: int = 4096          # paper: 1,048,576 (scaled for CPU harness)
+    n_tasks: int = 64               # the grain dial: m = n_playouts / n_tasks
+    n_workers: int = 16             # parallel lanes (hardware-thread analogue)
+    vl_rounds: int = 1              # virtual-loss rounds per sync iteration
+    virtual_loss: float = 1.0
+    cp: float = 1.0                 # paper: Cp = 1.0
+    select_noise: float = 1e-3      # per-lane UCT tie-break jitter
+    tree_cap: int = 1 << 15
+    scheduler: str = "fifo"         # fifo | rebalance | one_per_core | sequential
+
+    @property
+    def spec(self) -> hx.HexSpec:
+        return hx.HexSpec(self.board_size)
+
+    @property
+    def grain(self) -> int:
+        return max(1, self.n_playouts // max(1, self.n_tasks))
+
+
+# ------------------------------------------------------------- selection ----
+def select_one(tree: Tree, root_board: jnp.ndarray, spec: hx.HexSpec, cp: float,
+               noise_key: jax.Array, noise_scale: float):
+    """Descend from the root to a not-fully-expanded (or terminal) node.
+
+    Returns (path, depth, leaf, board_at_leaf, n_empty_at_leaf). ``path`` is
+    (max_depth,) int32 padded with the tree's PAD row index.
+    """
+    n_cells = spec.n_cells
+    max_depth = n_cells + 1
+    cap = tree.cap
+    C = tree.max_children
+
+    path0 = jnp.full((max_depth,), cap, dtype=jnp.int32).at[0].set(0)
+    n_empty0 = (root_board == hx.EMPTY).sum().astype(jnp.int32)
+
+    def cond(st):
+        node, board, depth, path, n_empty, done = st
+        return ~done
+
+    def body(st):
+        node, board, depth, path, n_empty, _ = st
+        n_kids = tree.n_children[node]
+        terminal = n_empty == 0
+        fully = (n_kids == n_empty) & ~terminal
+        # score children
+        slots = tree.children[node]  # (C,)
+        valid = jnp.arange(C, dtype=jnp.int32) < n_kids
+        safe = jnp.where(valid, slots, cap)
+        scores = uct_mod.uct_scores(
+            tree.wins[safe], tree.visits[safe], tree.vloss[safe],
+            tree.visits[node] + tree.vloss[node], cp, valid)
+        noise = None
+        if noise_scale > 0.0:
+            noise = noise_scale * jax.random.uniform(
+                jax.random.fold_in(noise_key, depth), (C,))
+        pick = uct_mod.select_child(scores, noise)
+        child = safe[pick]
+        mv = tree.move[child]
+        new_board = hx.place(board, mv, tree.to_move[node])
+        nxt = (child, new_board, depth + 1,
+               path.at[depth + 1].set(child), n_empty - 1, False)
+        stay = (node, board, depth, path, n_empty, True)
+        return jax.tree.map(
+            lambda a, b: jnp.where(fully & (depth < max_depth - 2), a, b), nxt, stay)
+
+    node, board, depth, path, n_empty, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), root_board, jnp.int32(0), path0, n_empty0, False))
+    return path, depth, node, board, n_empty
+
+
+def propose_move(tree: Tree, leaf: jnp.ndarray, board: jnp.ndarray,
+                 spec: hx.HexSpec, key: jax.Array) -> jnp.ndarray:
+    """Sample a uniformly-random untried move at `leaf` (-1 if none).
+
+    "Random unexplored child" of the paper's expansion step.
+    """
+    n_cells = spec.n_cells
+    C = tree.max_children
+    cap = tree.cap
+    legal = board == hx.EMPTY
+    slots = tree.children[leaf]
+    valid = jnp.arange(C, dtype=jnp.int32) < tree.n_children[leaf]
+    tried_moves = jnp.where(valid, tree.move[jnp.where(valid, slots, cap)], n_cells)
+    tried = jnp.zeros((n_cells + 1,), dtype=bool).at[tried_moves].set(True)[:n_cells]
+    untried = legal & ~tried
+    g = jax.random.gumbel(key, (n_cells,))
+    mv = jnp.argmax(jnp.where(untried, g, -jnp.inf)).astype(jnp.int32)
+    return jnp.where(untried.any(), mv, jnp.int32(NO_NODE))
+
+
+# -------------------------------------------------------- dedup expansion ----
+def expand_batch(tree: Tree, leaves: jnp.ndarray, moves: jnp.ndarray,
+                 active: jnp.ndarray):
+    """Batch-insert unique (leaf, move) proposals; return per-worker node ids.
+
+    The scatter/prefix-sum replacement for the paper's expansion-phase lock +
+    atomic child index: proposals are sorted by (leaf, move) key, duplicates
+    collapse onto their first occurrence, slots are rank-allocated.
+    """
+    W = leaves.shape[0]
+    cap = tree.cap
+    INVALID = jnp.int32(np.int32(2**30))
+
+    valid = (moves >= 0) & active
+    leaf_k = jnp.where(valid, leaves, INVALID)
+    move_k = jnp.where(valid, moves, INVALID)
+    idx = jnp.arange(W, dtype=jnp.int32)
+    # lexicographic (leaf, move) sort — no key packing, so `move` may be any
+    # int32 (Hex cell index or LM token id alike)
+    leaf_s, move_s, order = jax.lax.sort(
+        (leaf_k, move_k, idx), num_keys=2, is_stable=True)
+    valid_s = leaf_s < INVALID
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool),
+         (leaf_s[1:] != leaf_s[:-1]) | (move_s[1:] != move_s[:-1])]) & valid_s
+    uniq_rank = jnp.cumsum(first.astype(jnp.int32)) - 1  # dup shares first's rank
+    can = (tree.n_nodes + uniq_rank < cap) & valid_s
+    alloc = first & can
+    new_id_s = jnp.where(can, tree.n_nodes + uniq_rank, cap)
+
+    leaf_s = jnp.where(valid_s, leaf_s, cap)
+    move_s = jnp.where(valid_s, move_s, NO_NODE)
+
+    # child-slot = existing n_children[leaf] + rank of this unique within its
+    # leaf group (uniques of one leaf are contiguous in sorted order)
+    leaf_prev = jnp.concatenate([jnp.full((1,), -1, jnp.int32), leaf_s[:-1]])
+    group_start = leaf_s != leaf_prev
+    start_rank = jax.lax.cummax(jnp.where(group_start, uniq_rank, -1))
+    within = uniq_rank - start_rank
+    slot = jnp.clip(tree.n_children[leaf_s] + within, 0, tree.max_children - 1)
+
+    tgt = jnp.where(alloc, new_id_s, cap)
+    src_leaf = jnp.where(alloc, leaf_s, cap)
+    parent = tree.parent.at[tgt].set(jnp.where(alloc, leaf_s, NO_NODE))
+    move_arr = tree.move.at[tgt].set(jnp.where(alloc, move_s, NO_NODE))
+    to_move = tree.to_move.at[tgt].set(
+        jnp.where(alloc, 3 - tree.to_move[leaf_s], 0))
+    children = tree.children.at[src_leaf, jnp.where(alloc, slot, 0)].set(
+        jnp.where(alloc, new_id_s, tree.children[src_leaf, jnp.where(alloc, slot, 0)]))
+    n_children = tree.n_children.at[src_leaf].add(alloc.astype(jnp.int32))
+    n_new = alloc.sum().astype(jnp.int32)
+
+    # hygiene: pad row never owns state
+    parent = parent.at[cap].set(NO_NODE)
+    move_arr = move_arr.at[cap].set(NO_NODE)
+    n_children = n_children.at[cap].set(0)
+
+    tree = tree._replace(parent=parent, move=move_arr, to_move=to_move,
+                         children=children, n_children=n_children,
+                         n_nodes=tree.n_nodes + n_new)
+    # map back to worker order: duplicates get their first occurrence's id
+    per_sorted = jnp.where(valid_s & can, new_id_s, cap)
+    new_ids = jnp.zeros((W,), jnp.int32).at[order].set(per_sorted)
+    return tree, new_ids
+
+
+# ---------------------------------------------------------- sync iteration ----
+def sync_iteration(tree: Tree, root_board: jnp.ndarray, cfg: GSCPMConfig,
+                   iter_keys: jnp.ndarray, active: jnp.ndarray) -> Tree:
+    """One batched GSCPM iteration of width W = cfg.n_workers."""
+    spec = cfg.spec
+    W = cfg.n_workers
+    R = max(1, min(cfg.vl_rounds, W))
+    while W % R != 0:  # static fixup; R is a python int
+        R -= 1
+    Wr = W // R
+
+    def select_group(tree_r, keys_g):
+        def one(k):
+            k_noise, k_move, k_po = jax.random.split(k, 3)
+            path, depth, leaf, board, n_empty = select_one(
+                tree_r, root_board, spec, cfg.cp, k_noise, cfg.select_noise)
+            mv = propose_move(tree_r, leaf, board, spec, k_move)
+            return path, depth, leaf, board, mv, k_po
+        return jax.vmap(one)(keys_g)
+
+    keys_r = iter_keys.reshape(R, Wr, *iter_keys.shape[1:])
+    active_r = active.reshape(R, Wr)
+
+    def round_body(tr, inp):
+        keys_g, act_g = inp
+        out = select_group(tr, keys_g)
+        paths = out[0]
+        tr = add_vloss(tr, paths, act_g.astype(jnp.float32), cfg.virtual_loss)
+        return tr, out
+
+    tree, outs = jax.lax.scan(round_body, tree, (keys_r, active_r))
+    tree = reset_vloss(tree)
+
+    paths = outs[0].reshape(W, -1)
+    depths = outs[1].reshape(W)
+    leaves = outs[2].reshape(W)
+    boards = outs[3].reshape(W, -1)
+    moves = outs[4].reshape(W)
+    po_keys = outs[5].reshape(W, *outs[5].shape[2:])
+
+    tree, new_ids = expand_batch(tree, leaves, moves, active)
+
+    expanded = new_ids < tree.cap
+    # the new node joins the backup path
+    paths = jnp.where(
+        jnp.arange(paths.shape[1])[None, :] == (depths + 1)[:, None],
+        jnp.where(expanded[:, None], new_ids[:, None], tree.cap),
+        paths)
+
+    def one_playout(board, leaf, mv, k):
+        mover = tree.to_move[leaf]
+        b2 = jnp.where(mv >= 0, hx.place(board, jnp.maximum(mv, 0), mover), board)
+        nxt = jnp.where(mv >= 0, 3 - mover, mover)
+        filled = hx.random_fill(b2, nxt, k, spec)
+        return hx.winner(filled, spec)
+
+    winners = jax.vmap(one_playout)(boards, leaves, moves, po_keys)
+    return backup_paths(tree, paths, winners, active.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0,))
+def run_chunk(tree: Tree, root_board: jnp.ndarray, cfg: GSCPMConfig,
+              task_keys: jnp.ndarray, active: jnp.ndarray,
+              m: jnp.ndarray) -> Tree:
+    """Run `m` sync iterations (one task-grain per lane) — jitted once per cfg."""
+
+    def body(i, tr):
+        iter_keys = jax.vmap(lambda tk: jax.random.fold_in(tk, i))(task_keys)
+        return sync_iteration(tr, root_board, cfg, iter_keys, active)
+
+    return jax.lax.fori_loop(0, m, body, tree)
+
+
+# ------------------------------------------------------------------ driver ----
+def gscpm_search(board: jnp.ndarray, to_move: int, cfg: GSCPMConfig,
+                 key: jax.Array) -> tuple[Tree, dict[str, Any]]:
+    """Full GSCPM search (paper Fig 4): schedule tasks, return tree + stats."""
+    spec = cfg.spec
+    tree = init_tree(cfg.tree_cap, spec.n_cells, to_move)
+    schedule = sched.make_schedule(
+        cfg.n_playouts, cfg.n_tasks, cfg.n_workers, cfg.scheduler)
+
+    t0 = time.perf_counter()
+    playouts = 0
+    masked_lane_iters = 0
+    for rnd in schedule:
+        task_keys = jax.vmap(lambda t: jax.random.fold_in(key, t))(
+            jnp.asarray(rnd.task_ids, dtype=jnp.int32))
+        active = jnp.asarray(rnd.active)
+        tree = run_chunk(tree, board, cfg, task_keys, active,
+                         jnp.asarray(rnd.m, dtype=jnp.int32))
+        playouts += int(rnd.active.sum()) * rnd.m
+        masked_lane_iters += int((~rnd.active).sum()) * rnd.m
+    jax.block_until_ready(tree.visits)
+    dt = time.perf_counter() - t0
+
+    stats = {
+        "time_s": dt,
+        "playouts": playouts,
+        "playouts_per_s": playouts / max(dt, 1e-9),
+        "rounds": len(schedule),
+        "grain": cfg.grain,
+        "masked_lane_fraction": masked_lane_iters
+        / max(1, playouts + masked_lane_iters),
+        "tree_nodes": int(tree.n_nodes),
+        "root_value": float(root_value(tree)),
+        "best_move": int(best_child(tree)),
+    }
+    return tree, stats

@@ -1,0 +1,194 @@
+"""Pure-JAX Hex game environment.
+
+The paper's benchmark application is a from-scratch 11x11 Hex engine. Board
+cells are indexed row-major. Player 1 (BLACK) connects the TOP edge to the
+BOTTOM edge; player 2 (WHITE) connects LEFT to RIGHT. A *move* is the flat
+index of an empty cell.
+
+Hardware adaptation (DESIGN.md §2/§9): the paper uses a disjoint-set
+(union-find) structure for connectivity. Union-find is pointer-chasing and
+hostile to vector hardware, so we use the vectorizable equivalent: a frontier
+flood-fill to a fixpoint (`lax.while_loop` over neighbor dilation). Semantics
+are identical (tested against a python union-find oracle in tests/test_hex.py).
+
+The playout exploits the Hex theorem: a completely filled board has exactly
+one winner, so a playout = randomly fill all empty cells with alternating
+stones, then run ONE connectivity check for BLACK (if BLACK is not connected,
+WHITE is). This mirrors the paper's "highly optimized" engine, which also
+evaluates terminal positions only.
+
+Everything is fixed-shape and `vmap`/`jit` friendly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+EMPTY = jnp.int8(0)
+BLACK = jnp.int8(1)  # connects top <-> bottom
+WHITE = jnp.int8(2)  # connects left <-> right
+
+
+class HexSpec(NamedTuple):
+    """Static board description (python ints; safe to close over in jit)."""
+
+    size: int
+
+    @property
+    def n_cells(self) -> int:
+        return self.size * self.size
+
+
+def neighbor_table(size: int) -> np.ndarray:
+    """(n_cells, 6) int32 neighbor indices; `n_cells` acts as a pad sentinel.
+
+    Hex adjacency on a rhombus: (r-1,c), (r-1,c+1), (r,c-1), (r,c+1),
+    (r+1,c-1), (r+1,c).
+    """
+    n = size * size
+    tbl = np.full((n, 6), n, dtype=np.int32)
+    deltas = [(-1, 0), (-1, 1), (0, -1), (0, 1), (1, -1), (1, 0)]
+    for r in range(size):
+        for c in range(size):
+            i = r * size + c
+            for k, (dr, dc) in enumerate(deltas):
+                rr, cc = r + dr, c + dc
+                if 0 <= rr < size and 0 <= cc < size:
+                    tbl[i, k] = rr * size + cc
+    return tbl
+
+
+@functools.lru_cache(maxsize=None)
+def _static_tables(size: int):
+    """Neighbor table + edge masks as numpy constants (cached per size)."""
+    n = size * size
+    nbr = neighbor_table(size)
+    top = np.zeros(n, dtype=bool)
+    top[:size] = True
+    bottom = np.zeros(n, dtype=bool)
+    bottom[n - size :] = True
+    left = np.zeros(n, dtype=bool)
+    left[::size] = True
+    right = np.zeros(n, dtype=bool)
+    right[size - 1 :: size] = True
+    return nbr, top, bottom, left, right
+
+
+def empty_board(spec: HexSpec) -> jnp.ndarray:
+    return jnp.zeros(spec.n_cells, dtype=jnp.int8)
+
+
+def place(board: jnp.ndarray, move: jnp.ndarray, player: jnp.ndarray) -> jnp.ndarray:
+    """Place `player`'s stone at flat index `move` (no legality check)."""
+    return board.at[move].set(player.astype(jnp.int8))
+
+
+def legal_mask(board: jnp.ndarray) -> jnp.ndarray:
+    return board == EMPTY
+
+
+def connected(board: jnp.ndarray, player: jnp.ndarray, spec: HexSpec) -> jnp.ndarray:
+    """True iff `player` has a chain between their two edges.
+
+    Frontier flood-fill to a fixpoint. The padded board (extra sentinel cell)
+    keeps every gather in-bounds without branching.
+    """
+    nbr, top, bottom, left, right = _static_tables(spec.size)
+    nbr = jnp.asarray(nbr)
+    player = player.astype(jnp.int8)
+    mine = board == player
+    start = jnp.where(player == BLACK, jnp.asarray(top), jnp.asarray(left))
+    goal = jnp.where(player == BLACK, jnp.asarray(bottom), jnp.asarray(right))
+
+    reach0 = mine & start
+
+    def body(state):
+        reach, _ = state
+        padded = jnp.concatenate([reach, jnp.zeros((1,), dtype=bool)])
+        # cell joins the reach-set if any neighbor is reached and it is ours
+        nbr_reached = padded[nbr].any(axis=1)
+        new = reach | (nbr_reached & mine)
+        return new, (new != reach).any()
+
+    def cond(state):
+        _, changed = state
+        return changed
+
+    reach, _ = jax.lax.while_loop(cond, body, (reach0, reach0.any()))
+    return (reach & goal).any()
+
+
+def winner(board: jnp.ndarray, spec: HexSpec) -> jnp.ndarray:
+    """Winner of a FILLED board (Hex theorem: exactly one exists).
+
+    One flood-fill: if BLACK is not connected, WHITE is. Returns int8 in
+    {1, 2}. On a partially filled board, returns BLACK connectivity result
+    (i.e. 1 if black connected else 2) — callers must only use this on
+    terminal/filled boards; `connected` is the general check.
+    """
+    black_wins = connected(board, BLACK, spec)
+    return jnp.where(black_wins, BLACK, WHITE)
+
+
+def random_fill(
+    board: jnp.ndarray, to_move: jnp.ndarray, key: jax.Array, spec: HexSpec
+) -> jnp.ndarray:
+    """Fill every empty cell with alternating stones in a random order.
+
+    Equivalent to playing uniformly-random legal moves to the end of the game
+    (the paper's playout policy): assign a random rank to each empty cell; the
+    cell with the k-th smallest rank receives the stone of the player who is
+    k-th to move.
+    """
+    empties = board == EMPTY
+    n_empty_before = jnp.cumsum(empties) - empties  # rank among empties, stable
+    noise = jax.random.uniform(key, board.shape)
+    # random order of the empty cells: argsort noise restricted to empties
+    order_key = jnp.where(empties, noise, jnp.inf)
+    order = jnp.argsort(order_key)  # empties first in random order
+    rank = jnp.zeros(board.shape, dtype=jnp.int32).at[order].set(
+        jnp.arange(board.shape[0], dtype=jnp.int32)
+    )
+    to_move = to_move.astype(jnp.int32)
+    other = jnp.int32(3) - to_move
+    fill_color = jnp.where((rank % 2) == 0, to_move, other).astype(jnp.int8)
+    del n_empty_before
+    return jnp.where(empties, fill_color, board)
+
+
+def playout(
+    board: jnp.ndarray, to_move: jnp.ndarray, key: jax.Array, spec: HexSpec
+) -> jnp.ndarray:
+    """Run one random playout; return the winning player (int8 1|2)."""
+    filled = random_fill(board, to_move, key, spec)
+    return winner(filled, spec)
+
+
+def playout_value(
+    board: jnp.ndarray,
+    to_move: jnp.ndarray,
+    perspective: jnp.ndarray,
+    key: jax.Array,
+    spec: HexSpec,
+) -> jnp.ndarray:
+    """Playout result as 1.0 if `perspective` wins else 0.0."""
+    w = playout(board, to_move, key, spec)
+    return (w == perspective.astype(jnp.int8)).astype(jnp.float32)
+
+
+def replay_moves(
+    moves: jnp.ndarray, n_moves: jnp.ndarray, first_player: jnp.ndarray, spec: HexSpec
+) -> jnp.ndarray:
+    """Reconstruct a board from a move list (fixed-length, masked by n_moves)."""
+    board = empty_board(spec)
+
+    def body(i, b):
+        player = jnp.where((i % 2) == 0, first_player, 3 - first_player)
+        return jnp.where(i < n_moves, place(b, moves[i], player), b)
+
+    return jax.lax.fori_loop(0, moves.shape[0], body, board)

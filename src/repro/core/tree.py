@@ -1,0 +1,156 @@
+"""Array-of-structs MCTS tree, fixed capacity, scatter-update friendly.
+
+The paper keeps, per node, a preallocated vector of children plus atomic
+counters (`w_j`, `n_j`, child-allocation index). The TPU-native equivalent is
+a struct-of-arrays tree with one PAD row (index == capacity) that absorbs
+masked scatter writes, and deterministic `.at[].add` scatter updates in place
+of atomics (DESIGN.md §2).
+
+All shapes are static; the tree is a pytree and can be carried through
+`lax.fori_loop` / `lax.while_loop` and `jit`.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NO_NODE = -1  # null child / parent sentinel
+
+
+class Tree(NamedTuple):
+    """MCTS tree with `cap` usable rows and one pad row at index `cap`.
+
+    wins[j] is from the perspective of the player who MOVED INTO node j
+    (i.e. ``3 - to_move[j]``), matching the UCT bookkeeping in the paper:
+    X_j = w_j / n_j is the win rate child j offers its parent's mover.
+    """
+
+    parent: jnp.ndarray      # (cap+1,) i32
+    move: jnp.ndarray        # (cap+1,) i32  move from parent that made this node
+    to_move: jnp.ndarray     # (cap+1,) i32  player to move at this node (1|2)
+    children: jnp.ndarray    # (cap+1, max_children) i32, NO_NODE padded
+    n_children: jnp.ndarray  # (cap+1,) i32
+    visits: jnp.ndarray      # (cap+1,) f32  n_j
+    wins: jnp.ndarray        # (cap+1,) f32  w_j
+    vloss: jnp.ndarray       # (cap+1,) f32  transient virtual-loss counts
+    n_nodes: jnp.ndarray     # ()      i32  allocation counter (the paper's atomic index)
+
+    @property
+    def cap(self) -> int:
+        return self.parent.shape[0] - 1
+
+    @property
+    def max_children(self) -> int:
+        return self.children.shape[1]
+
+
+def init_tree(cap: int, max_children: int, root_to_move) -> Tree:
+    """Fresh tree containing only the root (node 0)."""
+    return Tree(
+        parent=jnp.full((cap + 1,), NO_NODE, dtype=jnp.int32),
+        move=jnp.full((cap + 1,), NO_NODE, dtype=jnp.int32),
+        to_move=jnp.zeros((cap + 1,), dtype=jnp.int32)
+        .at[0]
+        .set(jnp.asarray(root_to_move, dtype=jnp.int32)),
+        children=jnp.full((cap + 1, max_children), NO_NODE, dtype=jnp.int32),
+        n_children=jnp.zeros((cap + 1,), dtype=jnp.int32),
+        visits=jnp.zeros((cap + 1,), dtype=jnp.float32),
+        wins=jnp.zeros((cap + 1,), dtype=jnp.float32),
+        vloss=jnp.zeros((cap + 1,), dtype=jnp.float32),
+        n_nodes=jnp.asarray(1, dtype=jnp.int32),
+    )
+
+
+def reset_vloss(tree: Tree) -> Tree:
+    return tree._replace(vloss=jnp.zeros_like(tree.vloss))
+
+
+def backup_paths(tree: Tree, paths: jnp.ndarray, values: jnp.ndarray,
+                 weights: jnp.ndarray) -> Tree:
+    """Batched backpropagation — the scatter-add analogue of atomic w_j/n_j.
+
+    paths:   (W, max_depth) i32 node ids, PAD (== cap) where unused
+    values:  (W,) int32 winning player of each worker's playout (1|2)
+    weights: (W,) f32 1.0 for active lanes, 0.0 for masked lanes
+    """
+    W, D = paths.shape
+    flat = paths.reshape(-1)
+    # credit: 1 if the player who moved into the node won the playout
+    mover = 3 - tree.to_move[flat]  # (W*D,)
+    win = (mover == jnp.repeat(values.astype(jnp.int32), D)).astype(jnp.float32)
+    w = jnp.repeat(weights, D) * (flat != tree.cap)  # mask pads & inactive lanes
+    visits = tree.visits.at[flat].add(w)
+    wins = tree.wins.at[flat].add(w * win)
+    # pad row may have accumulated; zero it for hygiene
+    visits = visits.at[tree.cap].set(0.0)
+    wins = wins.at[tree.cap].set(0.0)
+    return tree._replace(visits=visits, wins=wins)
+
+
+def add_vloss(tree: Tree, paths: jnp.ndarray, weights: jnp.ndarray,
+              amount: float = 1.0) -> Tree:
+    """Scatter virtual loss along selected paths (diversifies later rounds)."""
+    W, D = paths.shape
+    flat = paths.reshape(-1)
+    w = jnp.repeat(weights, D) * (flat != tree.cap) * amount
+    vloss = tree.vloss.at[flat].add(w).at[tree.cap].set(0.0)
+    return tree._replace(vloss=vloss)
+
+
+def best_child(tree: Tree) -> jnp.ndarray:
+    """Most-visited root child's move (the paper's final move selection)."""
+    slots = tree.children[0]  # (max_children,)
+    valid = jnp.arange(slots.shape[0]) < tree.n_children[0]
+    safe = jnp.where(valid, slots, tree.cap)
+    counts = jnp.where(valid, tree.visits[safe], -jnp.inf)
+    return tree.move[safe[jnp.argmax(counts)]]
+
+
+def root_value(tree: Tree) -> jnp.ndarray:
+    """Root win-rate estimate for the root's to-move player.
+
+    wins[child] is from the mover-into-child = root's to-move perspective, so
+    the root player's value is sum(child wins)/sum(child visits).
+    """
+    slots = tree.children[0]
+    valid = jnp.arange(slots.shape[0]) < tree.n_children[0]
+    safe = jnp.where(valid, slots, tree.cap)
+    w = jnp.where(valid, tree.wins[safe], 0.0).sum()
+    n = jnp.where(valid, tree.visits[safe], 0.0).sum()
+    return w / jnp.maximum(n, 1.0)
+
+
+# ------------------------------------------------------------ invariants ----
+def check_invariants(tree: Tree) -> None:
+    """Host-side structural invariant checks (used by tests)."""
+    import numpy as np
+
+    t = jax.tree.map(np.asarray, tree)
+    n = int(t.n_nodes)
+    cap = tree.cap
+    assert 1 <= n <= cap
+    for i in range(1, n):
+        p = t.parent[i]
+        assert 0 <= p < n, f"node {i}: bad parent {p}"
+        assert t.to_move[i] == 3 - t.to_move[p], f"node {i}: to_move not alternating"
+        kids = t.children[p][: t.n_children[p]]
+        assert i in kids.tolist() or True  # membership checked below globally
+    for i in range(n):
+        k = int(t.n_children[i])
+        kids = t.children[i][:k]
+        assert (kids >= 0).all() and (kids < n).all(), f"node {i}: invalid child ids"
+        moves = t.move[kids]
+        assert len(set(moves.tolist())) == k, f"node {i}: duplicate child moves"
+        assert (t.parent[kids] == i).all(), f"node {i}: child parent mismatch"
+        assert (t.children[i][k:] == NO_NODE).all(), f"node {i}: stale child slots"
+        # visits of children never exceed the parent's visits
+        assert t.visits[kids].sum() <= t.visits[i] + 1e-6
+        assert 0.0 <= t.wins[i] <= t.visits[i] + 1e-6
+    # every allocated non-root node is some node's child exactly once
+    all_kids = []
+    for i in range(n):
+        all_kids += t.children[i][: int(t.n_children[i])].tolist()
+    assert sorted(all_kids) == list(range(1, n)), "child lists != allocated nodes"

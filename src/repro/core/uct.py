@@ -1,0 +1,51 @@
+"""UCT scoring and child selection (paper eq. 1).
+
+    UCT(j) = X_j + Cp * sqrt( ln(n) / n_j ),   X_j = w_j / n_j
+
+Virtual loss enters as extra visits with zero wins (lowers X_j and the
+exploration bonus), diversifying simultaneous selections — the batched
+analogue of the lock contention the paper's threads experience.
+
+This is the pure-jnp reference; `repro.kernels.uct_select` is the Pallas twin
+used on TPU (validated against this module in tests/test_kernels_uct.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -jnp.inf
+
+
+def uct_scores(wins: jnp.ndarray, visits: jnp.ndarray, vloss: jnp.ndarray,
+               parent_visits: jnp.ndarray, cp: float,
+               valid: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized UCT over child slots.
+
+    wins/visits/vloss: (..., C) child stats; parent_visits: (...,) scalar per
+    row; valid: (..., C) bool. Unvisited children get +inf (explored first),
+    invalid slots get -inf.
+    """
+    n_j = visits + vloss
+    x_j = wins / jnp.maximum(n_j, 1.0)
+    n_p = jnp.maximum(parent_visits, 1.0)
+    explore = cp * jnp.sqrt(jnp.log(n_p)[..., None] / jnp.maximum(n_j, 1.0))
+    score = x_j + explore
+    score = jnp.where(n_j <= 0.0, jnp.inf, score)
+    return jnp.where(valid, score, NEG_INF)
+
+
+def select_child(scores: jnp.ndarray, noise: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Argmax child slot, with optional per-slot tie-break noise.
+
+    noise is bounded jitter (e.g. eps * uniform) — with noise=None ties break
+    toward the lowest slot, matching the sequential reference.
+    """
+    if noise is not None:
+        # preserve +inf (unvisited-first) and -inf (invalid) semantics
+        finite = jnp.isfinite(scores)
+        scores = jnp.where(finite, scores + noise, scores)
+        # unvisited children: tie-break among them with noise too
+        unv = scores == jnp.inf
+        scores = jnp.where(unv, 1e30 + noise, scores)
+    return jnp.argmax(scores, axis=-1)

@@ -1,0 +1,141 @@
+"""Blockwise (flash) attention Pallas kernel — causal + GQA, TPU-targeted.
+
+The 32k-prefill cells are quadratic-attention dominated; this kernel keeps
+the working set in VMEM with an online-softmax accumulator so the (S x S)
+score matrix never touches HBM.
+
+Tiling (BlockSpec): grid = (B*H, S/bq, S/bk); for one (head, q-block) the
+kv grid axis streams K/V blocks of shape (bk, d) through VMEM while fp32
+scratch accumulators (m, l, acc) persist across the kv axis — the canonical
+revisiting-output pattern. Block shapes default to (128, 128): MXU-aligned
+(128x128 systolic array) and small enough that q/k/v/acc tiles fit VMEM
+(~(2*bq + 2*bk) * d * 4 B ~= 0.5 MB at d=128 vs ~16 MB VMEM/core).
+
+Causality is exploited structurally: kv blocks strictly above the diagonal
+are skipped via ``@pl.when`` (halves the FLOPs — this is why the kernel,
+not XLA's full-masked sdpa, is the TPU hot path for long prefill).
+
+GQA is handled in the index maps: query head h reads kv head h // G, so no
+K/V replication ever materializes.
+
+Validated on CPU with ``interpret=True`` against ``ref.flash_attention``
+over shape/dtype sweeps (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, block_q: int, block_k: int, causal: bool,
+                  n_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # skip kv blocks entirely above the causal diagonal
+    run = (not causal) or (ki * block_k <= qi * block_q + block_q - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale        # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                # (bk, d)
+        s = jax.lax.dot_general(                        # (bq, bk)
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]                             # (bq,)
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])                 # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, S, d); k/v: (B, Hkv, S, d), H % Hkv == 0. Returns q-shaped.
+
+    d is padded to a multiple of 128 lanes inside the wrapper (zero columns
+    are exact no-ops for both the dots and the softmax).
+    """
+    B, H, S, d = q.shape
+    Hkv = k.shape[1]
+    assert H % Hkv == 0, (H, Hkv)
+    G = H // Hkv
+    scale_v = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    dp = -(-d // 128) * 128
+    if dp != d:
+        pad = [(0, 0)] * 3 + [(0, dp - d)]
+        q, k, v = (jnp.pad(t, pad) for t in (q, k, v))
+
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    n_q, n_kv = S // bq, S // bk
+
+    qf = q.reshape(B * H, S, dp)
+    kf = k.reshape(B * Hkv, S, dp)
+    vf = v.reshape(B * Hkv, S, dp)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale_v, block_q=bq, block_k=bk, causal=causal,
+        n_kv=n_kv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, dp), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, dp), lambda b, i, j, G=G, Hkv=Hkv:
+                         ((b // (G * Hkv)) * Hkv + (b % (G * Hkv)) // G, j, 0)),
+            pl.BlockSpec((1, bk, dp), lambda b, i, j, G=G, Hkv=Hkv:
+                         ((b // (G * Hkv)) * Hkv + (b % (G * Hkv)) // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dp), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, dp), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # running max m
+            pltpu.VMEM((bq,), jnp.float32),      # running denom l
+            pltpu.VMEM((bq, dp), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+
+    out = out.reshape(B, H, S, dp)
+    return out[..., :d] if dp != d else out

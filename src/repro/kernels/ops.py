@@ -1,0 +1,45 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+``interpret`` defaults to auto: compiled on TPU, interpret-mode (pure
+Python execution of the kernel body) everywhere else — which is how this
+CPU container validates the kernels. Call sites (models/attention.py,
+core/gscpm.py) go through these wrappers only.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import uct_select as _us
+
+
+def _auto_interpret(interpret: bool | None) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, scale: float | None = None,
+                    interpret: bool | None = None,
+                    layout: str = "bshd") -> jnp.ndarray:
+    """Flash attention. layout 'bshd' (models) or 'bhsd' (kernel-native)."""
+    it = _auto_interpret(interpret)
+    if layout == "bshd":
+        q, k, v = (t.swapaxes(1, 2) for t in (q, k, v))
+    out = _fa.flash_attention(q, k, v, causal=causal, scale=scale,
+                              interpret=it)
+    return out.swapaxes(1, 2) if layout == "bshd" else out
+
+
+def uct_select(wins, visits, vloss, parent_total, valid, cp: float,
+               noise=None, interpret: bool | None = None):
+    return _us.uct_select(wins, visits, vloss, parent_total, valid, cp,
+                          noise=noise, interpret=_auto_interpret(interpret))
+
+
+def rmsnorm(x, w, eps: float = 1e-5, interpret: bool | None = None):
+    return _rn.rmsnorm(x, w, eps=eps, interpret=_auto_interpret(interpret))

@@ -1,0 +1,166 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape) cell + sharding rules.
+
+``input_specs(arch, shape)`` returns exactly what the lowered step function
+consumes — weak-type-correct, shardable, zero allocation:
+
+- train cells:   (abstract_state, batch{tokens, labels, mask[, patches|frames]})
+- prefill cells: (abstract_params, batch{tokens[, patches|frames]})
+- decode cells:  (abstract_params, tokens(B,1), pos(B,), abstract KV cache)
+
+``rules_for_shape`` picks the logical->mesh mapping per cell kind:
+decode shards the KV-cache length over ``model`` (MLA latents have no head
+axis to shard — without this the 236B decode cells blow 16 GB/chip), and
+long_500k (batch=1) spreads cache length over both axes.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.shapes import ShapeSpec
+from repro.models import api
+from repro.models.common import ModelConfig
+from repro.sharding import rules as shr
+from repro.train import step as train_step_mod
+
+SDS = jax.ShapeDtypeStruct
+
+ENCDEC_SRC_LEN = api.ENCDEC_SRC_LEN
+
+
+def rules_for_shape(shape: ShapeSpec) -> dict[str, Any]:
+    r = dict(shr.DEFAULT_RULES)
+    if shape.kind == "decode":
+        if shape.global_batch == 1:
+            r["batch"] = None
+            r["kv_len"] = ("data", "model")
+        else:
+            r["kv_len"] = "model"
+    if shape.kind == "prefill":
+        r["kv_len"] = "model"
+    return r
+
+
+def model_config_for(arch: str, shape: ShapeSpec) -> ModelConfig:
+    return configs.tune_for_shape(configs.get_config(arch), shape)
+
+
+def default_microbatches(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    """Grain-size control on the training side (paper Table I, DESIGN §4):
+    split the global batch into grains so per-grain activations fit HBM.
+    Baseline grains by model size; §Perf hillclimbs the dial per cell."""
+    n = api.n_params(cfg)
+    if n >= 50e9:
+        micro = 16
+    elif n >= 3e9:
+        micro = 4
+    elif n >= 1e9:
+        micro = 2
+    else:
+        micro = 1
+    while shape.global_batch % micro:
+        micro //= 2
+    return max(1, micro)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Abstract train/prefill batch for one cell."""
+    B = shape.global_batch
+    S = shape.seq_len
+    d: dict[str, SDS] = {}
+    if cfg.family == "vlm":
+        text = S - cfg.n_patches          # patches + text fill the budget
+        d["tokens"] = SDS((B, text), jnp.int32)
+        d["patches"] = SDS((B, cfg.n_patches, cfg.vision_width), cfg.cdtype)
+        if shape.kind == "train":
+            d["labels"] = SDS((B, text), jnp.int32)
+    elif cfg.family == "encdec":
+        src = min(ENCDEC_SRC_LEN, S)
+        d["tokens"] = SDS((B, S), jnp.int32)
+        d["frames"] = SDS((B, src, cfg.vision_width), cfg.cdtype)
+        if shape.kind == "train":
+            d["labels"] = SDS((B, S), jnp.int32)
+    else:
+        d["tokens"] = SDS((B, S), jnp.int32)
+        if shape.kind == "train":
+            d["labels"] = SDS((B, S), jnp.int32)
+    if shape.kind == "train":
+        d["mask"] = SDS((B, d["labels"].shape[1]), jnp.float32)
+    return d
+
+
+def cache_specs_abstract(cfg: ModelConfig, shape: ShapeSpec):
+    """(SDS tree, logical-axes tree) for the decode cells' KV cache."""
+    specs = api.cache_specs(cfg, shape.global_batch, shape.seq_len)
+    is_leaf = lambda x: isinstance(x, tuple) and len(x) == 2 and isinstance(
+        x[0], jax.ShapeDtypeStruct)
+    sds = jax.tree.map(lambda t: t[0], specs, is_leaf=is_leaf)
+    axes = jax.tree.map(lambda t: t[1], specs, is_leaf=is_leaf)
+    return sds, axes
+
+
+def input_specs(arch: str, shape_name: str,
+                cfg_overrides: dict | None = None) -> dict[str, Any]:
+    """Everything the dry-run needs for one cell (abstract, no allocation)."""
+    shape = configs.SHAPES[shape_name]
+    cfg = model_config_for(arch, shape)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    rules = rules_for_shape(shape)
+    out: dict[str, Any] = {"cfg": cfg, "shape": shape, "rules": rules}
+    if shape.kind == "train":
+        # >=100B: bf16 moments + bf16 grad accumulation (update math fp32)
+        # — without this, 236B x (2+4+4+4) B/param cannot fit 256 chips
+        big = api.n_params(cfg) >= 100e9
+        out["moment_dtype"] = "bfloat16" if big else "float32"
+        out["accum_dtype"] = "bfloat16" if big else "float32"
+        out["state"] = train_step_mod.abstract_state(cfg, out["moment_dtype"])
+        out["state_axes"] = train_step_mod.state_axes(cfg)
+        out["batch"] = batch_specs(cfg, shape)
+        out["n_microbatches"] = default_microbatches(cfg, shape)
+    elif shape.kind == "prefill":
+        out["params"] = api.abstract_params(cfg)
+        out["param_axes"] = api.param_axes(cfg)
+        out["batch"] = batch_specs(cfg, shape)
+    else:  # decode
+        out["params"] = api.abstract_params(cfg)
+        out["param_axes"] = api.param_axes(cfg)
+        out["tokens"] = SDS((shape.global_batch, 1), jnp.int32)
+        out["pos"] = SDS((shape.global_batch,), jnp.int32)
+        cache_sds, cache_axes = cache_specs_abstract(cfg, shape)
+        out["cache"] = cache_sds
+        out["cache_axes"] = cache_axes
+    return out
+
+
+# ---------------------------------------------------------------- shardings ----
+def _is_axes(x) -> bool:
+    return isinstance(x, tuple) and all(
+        e is None or isinstance(e, str) for e in x)
+
+
+def shardings_for(mesh, spec_tree, axes_tree, rules) -> Any:
+    """Divisibility-aware NamedShardings for an abstract tree.
+
+    (flatten both trees in parallel: the axes tree's tuple leaves would be
+    traversed as pytree containers under a joint tree.map)
+    """
+    sds_leaves, treedef = jax.tree.flatten(spec_tree)
+    ax_leaves = jax.tree.flatten(axes_tree, is_leaf=_is_axes)[0]
+    assert len(sds_leaves) == len(ax_leaves), (len(sds_leaves), len(ax_leaves))
+    out = [shr.named_sharding_for(mesh, a, tuple(s.shape), rules)
+           for s, a in zip(sds_leaves, ax_leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def batch_shardings_for(mesh, batch: dict, rules) -> dict:
+    return {
+        k: shr.named_sharding_for(
+            mesh, ("batch",) + (None,) * (len(v.shape) - 1), tuple(v.shape),
+            rules)
+        for k, v in batch.items()
+    }

@@ -1,0 +1,64 @@
+"""Training launcher: ``python -m repro.launch.train --arch smollm-135m``.
+
+Host mode (default) trains a reduced config on the local devices — the CPU
+e2e path used by examples/tests. ``--production`` lowers against the
+single-pod production mesh instead (requires the 512-device dry-run env;
+used to validate launcher plumbing without hardware).
+
+Fault tolerance is live in either mode: async checkpoints every
+``--ckpt-every`` steps, automatic resume from the newest valid checkpoint,
+non-finite-grad skip, straggler watchdog (repro.train.loop).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro import configs
+from repro.data.pipeline import DataConfig
+from repro.optim.adamw import OptConfig
+from repro.train.loop import LoopConfig, train
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="smollm-135m", choices=list(configs.ARCHS))
+    p.add_argument("--steps", type=int, default=200)
+    p.add_argument("--seq-len", type=int, default=256)
+    p.add_argument("--global-batch", type=int, default=16)
+    p.add_argument("--lr", type=float, default=3e-4)
+    p.add_argument("--microbatches", type=int, default=1)
+    p.add_argument("--ckpt-dir", default=None)
+    p.add_argument("--ckpt-every", type=int, default=50)
+    p.add_argument("--full-config", action="store_true",
+                   help="use the full published config (default: reduced twin)")
+    p.add_argument("--mesh", action="store_true",
+                   help="train under a mesh over the visible local devices")
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args()
+
+    cfg = (configs.get_config(args.arch) if args.full_config
+           else configs.reduced_config(args.arch))
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh()
+
+    out = train(
+        cfg,
+        OptConfig(lr=args.lr, warmup_steps=max(10, args.steps // 20),
+                  total_steps=args.steps),
+        DataConfig(seq_len=args.seq_len, global_batch=args.global_batch,
+                   seed=args.seed),
+        LoopConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                   ckpt_every=args.ckpt_every,
+                   n_microbatches=args.microbatches, seed=args.seed),
+        mesh=mesh,
+    )
+    print(f"final loss {out['final_loss']:.4f} | "
+          f"{out['steps_per_s']:.2f} steps/s | "
+          f"stragglers {out['stragglers']}")
+
+
+if __name__ == "__main__":
+    main()

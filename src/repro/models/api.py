@@ -1,0 +1,88 @@
+"""Family-dispatched model API used by train/serve/launch.
+
+One uniform surface over decoder-only (transformer.py) and encoder-decoder
+(encdec.py) models:
+
+    specs(cfg)                         -> param Spec tree
+    loss(params, cfg, batch)           -> scalar
+    cache_specs(cfg, batch, max_len)   -> tree of (ShapeDtypeStruct, axes)
+    init_cache(cfg, batch, max_len)    -> zeroed cache tree
+    prefill(params, cfg, batch, max_len) -> (logits, cache)
+    decode(params, cfg, token, pos, cache) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.models import encdec as ed
+from repro.models import transformer as tfm
+from repro.models.common import ModelConfig
+
+# encoder memory length used for enc-dec decode shapes (audio is bounded;
+# DESIGN.md §5 documents this interpretation of the enc-dec decode cells)
+ENCDEC_SRC_LEN = 4096
+
+
+def specs(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return ed.encdec_specs(cfg)
+    return tfm.lm_specs(cfg)
+
+
+def loss(params, cfg: ModelConfig, batch: dict):
+    if cfg.family == "encdec":
+        return ed.encdec_loss(params, cfg, batch)
+    return tfm.lm_loss(params, cfg, batch)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                src_len: int | None = None):
+    if cfg.family == "encdec":
+        return ed.encdec_cache_specs(cfg, batch, max_len,
+                                     src_len or min(ENCDEC_SRC_LEN, max_len))
+    return tfm.lm_cache_specs(cfg, batch, max_len)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               src_len: int | None = None):
+    if cfg.family == "encdec":
+        return ed.encdec_init_cache(cfg, batch, max_len,
+                                    src_len or min(ENCDEC_SRC_LEN, max_len))
+    return tfm.lm_init_cache(cfg, batch, max_len)
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, max_len: int):
+    if cfg.family == "encdec":
+        return ed.encdec_prefill(params, cfg, batch["frames"],
+                                 batch["tokens"], max_len)
+    return tfm.lm_prefill(params, cfg, batch["tokens"], max_len,
+                          patches=batch.get("patches"))
+
+
+def decode(params, cfg: ModelConfig, token, pos, cache):
+    if cfg.family == "encdec":
+        return ed.encdec_decode(params, cfg, token, pos, cache)
+    return tfm.lm_decode(params, cfg, token, pos, cache)
+
+
+def n_params(cfg: ModelConfig) -> int:
+    from repro.models.common import n_params as np_
+    return np_(specs(cfg))
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    from repro.models.common import init_tree, spec_with_dtype
+    return init_tree(spec_with_dtype(specs(cfg), cfg.pdtype), key)
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct param tree — the dry-run's no-allocation stand-in."""
+    from repro.models.common import spec_with_dtype, tree_specs
+    return tree_specs(spec_with_dtype(specs(cfg), cfg.pdtype))
+
+
+def param_axes(cfg: ModelConfig):
+    """Parallel tree of logical-axis tuples (for NamedSharding derivation)."""
+    from repro.models.common import tree_axes
+    return tree_axes(specs(cfg))

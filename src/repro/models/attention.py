@@ -1,0 +1,326 @@
+"""Attention variants: MHA/GQA (+bias), MLA (DeepSeek-V2), cache decode.
+
+All functions are pure; the Pallas flash-attention kernel is an optional hot
+path behind ``cfg.use_flash`` (never used in the dry-run, where the XLA
+einsum path keeps cost_analysis meaningful).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, Spec, dense_spec, norm_spec
+from repro.models.layers import apply_rope, rmsnorm
+from repro.sharding.rules import shard as _shard
+
+NEG = -1e30
+
+
+# ------------------------------------------------------------------- masks ----
+def causal_mask(S: int) -> jnp.ndarray:
+    return jnp.tril(jnp.ones((S, S), dtype=bool))
+
+
+def prefix_lm_mask(S: int, prefix_len: int) -> jnp.ndarray:
+    """Bidirectional over the first `prefix_len` positions, causal after
+    (PaliGemma-style image+prompt prefix)."""
+    m = causal_mask(S)
+    pre = jnp.arange(S) < prefix_len
+    return m | (pre[None, :] & pre[:, None])
+
+
+# --------------------------------------------------------------- GQA attn ----
+def gqa_specs(cfg: ModelConfig) -> dict:
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    s = {
+        "wq": Spec((d, H, hd), ("embed", "heads", None), 1.0 / math.sqrt(d)),
+        "wk": Spec((d, Hkv, hd), ("embed", "kv_heads", None), 1.0 / math.sqrt(d)),
+        "wv": Spec((d, Hkv, hd), ("embed", "kv_heads", None), 1.0 / math.sqrt(d)),
+        "wo": Spec((H, hd, d), ("heads", None, "embed"), 1.0 / math.sqrt(H * hd)),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = Spec((H, hd), ("heads", None), 0.0)
+        s["bk"] = Spec((Hkv, hd), ("kv_heads", None), 0.0)
+        s["bv"] = Spec((Hkv, hd), ("kv_heads", None), 0.0)
+    return s
+
+
+def _qkv(params, cfg: ModelConfig, x: jnp.ndarray, pos: jnp.ndarray):
+    """x: (B,S,d) -> q (B,S,H,hd), k/v (B,S,Hkv,hd), RoPE applied."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+         mask: jnp.ndarray | None, scale: float | None = None) -> jnp.ndarray:
+    """q (B,Sq,H,hd), k/v (B,Skv,Hkv,hd) with GQA head-group broadcast."""
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = scale or (1.0 / math.sqrt(hd))
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    scores = jnp.einsum("bqhgc,bkhc->bhgqk", qg * scale,
+                        k, preferred_element_type=jnp.float32)
+    del hd
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None, :, :] if mask.ndim == 3
+                           else mask[None, None, None, :, :], scores, NEG)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(B, Sq, H, v.shape[-1])  # v dim may differ from q (MLA)
+
+
+def sdpa_chunked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 chunk: int, prefix_len: jnp.ndarray | int = 0,
+                 scale: float | None = None,
+                 unroll: bool = False) -> jnp.ndarray:
+    """Causal/prefix-LM attention scanned over query chunks.
+
+    Bounds the live score tensor to (B, H, chunk, S) — the memory-term fix for
+    the 32k cells where a full (S, S) mask/score tensor is O(4 GB)/chip. The
+    mask is computed on the fly from positions (never materialized at S×S).
+    """
+    B, S, H, hd = q.shape
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+    qc = q.reshape(B, n, chunk, H, hd).swapaxes(0, 1)      # (n, B, c, H, hd)
+    kpos = jnp.arange(S, dtype=jnp.int32)
+
+    @jax.checkpoint  # per-chunk remat: otherwise the scan saves every
+    def step(_, inp):  # chunk's (B,H,chunk,S) probs for bwd = full S^2 again
+        qi, i = inp
+        qpos = i * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        mask = kpos[None, :] <= qpos[:, None]
+        mask = mask | ((qpos[:, None] < prefix_len) & (kpos[None, :] < prefix_len))
+        return None, sdpa(qi, k, v, mask, scale)
+
+    if unroll:  # dry-run: every chunk visible to cost analysis
+        outs = jnp.stack([step(None, (qc[i], jnp.int32(i)))[1]
+                          for i in range(n)])
+    else:
+        _, outs = jax.lax.scan(step, None,
+                               (qc, jnp.arange(n, dtype=jnp.int32)))
+    # out dim follows v (MLA: v_head_dim != qk head dim)
+    return outs.swapaxes(0, 1).reshape(B, S, H, outs.shape[-1])
+
+
+def run_attention(cfg: ModelConfig, q, k, v, prefix_len=0,
+                  scale: float | None = None) -> jnp.ndarray:
+    """Dispatch: Pallas flash > q-chunked scan > naive, per cfg."""
+    S = q.shape[1]
+    if cfg.use_flash and prefix_len == 0:
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=True, scale=scale)
+    if cfg.attn_chunk and S % cfg.attn_chunk == 0 and S > cfg.attn_chunk:
+        return sdpa_chunked(q, k, v, cfg.attn_chunk, prefix_len, scale,
+                            unroll=cfg.unroll_loops)
+    if isinstance(prefix_len, int) and prefix_len == 0:
+        mask = causal_mask(S)
+    else:
+        mask = prefix_lm_mask(S, prefix_len)
+    return sdpa(q, k, v, mask, scale)
+
+
+def gqa_attention(params, cfg: ModelConfig, x: jnp.ndarray,
+                  mask: jnp.ndarray | None = None,
+                  pos: jnp.ndarray | None = None) -> jnp.ndarray:
+    B, S, _ = x.shape
+    if pos is None:
+        pos = jnp.arange(S)[None, :].astype(jnp.int32)
+    q, k, v = _qkv(params, cfg, x, pos)
+    q = _shard(q, ("batch", None, "heads", None))
+    k = _shard(k, ("batch", None, "kv_heads", None))
+    if mask is None:
+        out = run_attention(cfg, q, k, v)
+    else:
+        out = sdpa(q, k, v, mask)
+    out = _shard(out, ("batch", None, "heads", None))
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+
+def gqa_prefix_attention(params, cfg: ModelConfig, x: jnp.ndarray,
+                         prefix_len) -> jnp.ndarray:
+    """Prefix-LM attention (PaliGemma): bidirectional prefix, causal tail."""
+    B, S, _ = x.shape
+    pos = jnp.arange(S)[None, :].astype(jnp.int32)
+    q, k, v = _qkv(params, cfg, x, pos)
+    q = _shard(q, ("batch", None, "heads", None))
+    out = run_attention(cfg, q, k, v, prefix_len=prefix_len)
+    out = _shard(out, ("batch", None, "heads", None))
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+
+# ------------------------------------------------------------ GQA + cache ----
+def gqa_prefill(params, cfg: ModelConfig, x: jnp.ndarray,
+                mask: jnp.ndarray | None = None, prefix_len=0):
+    """Returns (attn_out, (k_cache, v_cache)) for the processed prefix."""
+    B, S, _ = x.shape
+    pos = jnp.arange(S)[None, :].astype(jnp.int32)
+    q, k, v = _qkv(params, cfg, x, pos)
+    if mask is None:
+        out = run_attention(cfg, q, k, v, prefix_len=prefix_len)
+    else:
+        out = sdpa(q, k, v, mask)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return out, (k, v)
+
+
+def update_cache_at(cache: jnp.ndarray, new: jnp.ndarray,
+                    pos_b: jnp.ndarray) -> jnp.ndarray:
+    """Write `new` (B,1,...) into `cache` (B,Smax,...) at per-batch positions.
+
+    vmap over the batch keeps per-slot positions independent (continuous
+    batching: every slot may sit at a different depth) while staying a
+    single batched dynamic-update-slice for the partitioner.
+    """
+    return jax.vmap(
+        lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(
+            c, n.astype(c.dtype), p, axis=0))(cache, new, pos_b[:, 0])
+
+
+def gqa_decode(params, cfg: ModelConfig, x: jnp.ndarray, cache: tuple,
+               pos: jnp.ndarray):
+    """One-token decode. x: (B,1,d); cache k/v: (B,Smax,Hkv,hd); pos: (B,) or ()."""
+    k_cache, v_cache = cache
+    B = x.shape[0]
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1, 1), (B, 1))
+    q, k_new, v_new = _qkv(params, cfg, x, pos_b)
+    # write the new K/V at each slot's own `pos`
+    k_cache = update_cache_at(k_cache, k_new, pos_b)
+    v_cache = update_cache_at(v_cache, v_new, pos_b)
+    k_cache = _shard(k_cache, ("batch", "kv_len", "kv_heads", None))
+    v_cache = _shard(v_cache, ("batch", "kv_len", "kv_heads", None))
+    Smax = k_cache.shape[1]
+    valid = (jnp.arange(Smax)[None, :] <= pos_b)        # (B, Smax)
+    out = sdpa(q, k_cache.astype(x.dtype), v_cache.astype(x.dtype),
+               valid[:, None, :])                        # mask (B,1,Smax)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return out, (k_cache, v_cache)
+
+
+# ----------------------------------------------------------- MLA (DSv2) ----
+def mla_specs(cfg: ModelConfig) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    return {
+        "wq_a": dense_spec(d, qr, ("embed", "lora")),
+        "q_norm": norm_spec(qr),
+        "wq_b": Spec((qr, H, dn + dr), ("lora", "heads", None), 1.0 / math.sqrt(qr)),
+        "wkv_a": dense_spec(d, kvr, ("embed", "lora")),
+        "kv_norm": norm_spec(kvr),
+        "wk_rope": dense_spec(d, dr, ("embed", None)),
+        "wkv_b": Spec((kvr, H, dn + dv), ("lora", "heads", None),
+                      1.0 / math.sqrt(kvr)),
+        "wo": Spec((H, dv, d), ("heads", None, "embed"), 1.0 / math.sqrt(H * dv)),
+    }
+
+
+def _mla_qkv(params, cfg: ModelConfig, x, pos, c_kv, k_pe):
+    """Shared MLA math given latent c_kv (B,S,kvr) and rope key k_pe (B,S,dr)."""
+    dt = x.dtype
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    cq = rmsnorm(x @ params["wq_a"].astype(dt), params["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["wq_b"].astype(dt))
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    q_pe = apply_rope(q_pe, pos, cfg.rope_theta)
+    kv = jnp.einsum("bsr,rhk->bshk", c_kv, params["wkv_b"].astype(dt))
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k_pe_h = jnp.broadcast_to(k_pe[:, :, None, :],
+                              (*k_pe.shape[:2], H, dr))
+    q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_pe_h], axis=-1)
+    scale = 1.0 / math.sqrt(dn + dr)
+    return q_full, k_full, v, scale
+
+
+def mla_attention(params, cfg: ModelConfig, x: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    B, S, _ = x.shape
+    dt = x.dtype
+    pos = jnp.arange(S)[None, :].astype(jnp.int32)
+    c_kv = rmsnorm(x @ params["wkv_a"].astype(dt), params["kv_norm"], cfg.norm_eps)
+    k_pe = apply_rope((x @ params["wk_rope"].astype(dt))[:, :, None, :],
+                      pos, cfg.rope_theta)[:, :, 0, :]
+    q, k, v, scale = _mla_qkv(params, cfg, x, pos, c_kv, k_pe)
+    if mask is None:
+        out = run_attention(cfg, q, k, v, scale=scale)
+    else:
+        out = sdpa(q, k, v, mask, scale)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+
+
+def mla_prefill(params, cfg: ModelConfig, x: jnp.ndarray):
+    """Cache is the LATENT (c_kv, k_pe) — the MLA memory win: per token only
+    kv_lora_rank + rope_dim values instead of 2·H·hd."""
+    B, S, _ = x.shape
+    dt = x.dtype
+    pos = jnp.arange(S)[None, :].astype(jnp.int32)
+    c_kv = rmsnorm(x @ params["wkv_a"].astype(dt), params["kv_norm"], cfg.norm_eps)
+    k_pe = apply_rope((x @ params["wk_rope"].astype(dt))[:, :, None, :],
+                      pos, cfg.rope_theta)[:, :, 0, :]
+    q, k, v, scale = _mla_qkv(params, cfg, x, pos, c_kv, k_pe)
+    out = run_attention(cfg, q, k, v, scale=scale)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return out, (c_kv, k_pe)
+
+
+def mla_decode(params, cfg: ModelConfig, x: jnp.ndarray, cache: tuple,
+               pos: jnp.ndarray):
+    c_cache, pe_cache = cache  # (B,Smax,kvr), (B,Smax,dr)
+    B = x.shape[0]
+    dt = x.dtype
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1, 1), (B, 1))
+    c_new = rmsnorm(x @ params["wkv_a"].astype(dt), params["kv_norm"], cfg.norm_eps)
+    pe_new = apply_rope((x @ params["wk_rope"].astype(dt))[:, :, None, :],
+                        pos_b, cfg.rope_theta)[:, :, 0, :]
+    c_cache = update_cache_at(c_cache, c_new, pos_b)
+    pe_cache = update_cache_at(pe_cache, pe_new, pos_b)
+    c_cache = _shard(c_cache, ("batch", "kv_len", None))
+    q, k, v, scale = _mla_qkv(params, cfg, x, pos_b,
+                              c_cache.astype(dt), pe_cache.astype(dt))
+    Smax = c_cache.shape[1]
+    valid = jnp.arange(Smax)[None, :] <= pos_b
+    out = sdpa(q, k, v, valid[:, None, :], scale)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return out, (c_cache, pe_cache)
+
+
+# ------------------------------------------------------------- cross attn ----
+def cross_specs(cfg: ModelConfig) -> dict:
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    return {
+        "wq": Spec((d, H, hd), ("embed", "heads", None), 1.0 / math.sqrt(d)),
+        "wk": Spec((d, H, hd), ("embed", "heads", None), 1.0 / math.sqrt(d)),
+        "wv": Spec((d, H, hd), ("embed", "heads", None), 1.0 / math.sqrt(d)),
+        "wo": Spec((H, hd, d), ("heads", None, "embed"), 1.0 / math.sqrt(H * hd)),
+    }
+
+
+def cross_attention(params, cfg: ModelConfig, x: jnp.ndarray,
+                    memory: jnp.ndarray,
+                    mem_mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """x: (B,Sq,d) queries over encoder memory (B,Skv,d). No RoPE."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", memory, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", memory, params["wv"].astype(dt))
+    mask = None
+    if mem_mask is not None:
+        mask = jnp.broadcast_to(mem_mask[:, None, :],
+                                (x.shape[0], x.shape[1], memory.shape[1]))
+    out = sdpa(q, k, v, mask)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))

@@ -1,0 +1,190 @@
+"""Model configuration + parameter-tree machinery shared by all families.
+
+Parameters are plain nested dicts of arrays. Every leaf has a parallel
+*logical axis* annotation (tuple of axis names like ("embed", "mlp")) used by
+``repro.sharding.rules`` to derive PartitionSpecs. ``param_specs`` builds the
+tree abstractly (ShapeDtypeStruct — used by the dry-run, no allocation);
+``init_params`` materializes it (used by smoke tests and real training).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"          # dense | moe | ssm | hybrid | vlm | encdec | xlstm
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    d_ff: int = 256
+    vocab: int = 512
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    act: str = "silu"              # silu (SwiGLU) | gelu (GeGLU) | gelu_mlp
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    # --- MoE ---
+    n_experts: int = 0
+    n_experts_per_tok: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    n_dense_layers: int = 0        # leading dense (non-MoE) layers
+    norm_topk_prob: bool = False
+    moe_group_size: int = 4096     # tokens per dispatch group (GShard-style)
+    # --- MLA (DeepSeek-V2) ---
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+    # --- SSM (Mamba-2) ---
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 128
+    # --- hybrid (zamba2) ---
+    attn_every: int = 6            # shared attn block period
+    n_shared_blocks: int = 2       # alternating shared attention blocks
+    # --- xLSTM ---
+    slstm_every: int = 8           # every k-th block is sLSTM
+    mlstm_proj_factor: float = 2.0
+    # --- vlm ---
+    n_patches: int = 0
+    vision_width: int = 0          # stub frontend embedding width
+    prefix_lm: bool = False
+    # --- encdec ---
+    n_enc_layers: int = 0
+    # --- numerics / structure ---
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    remat: str = "none"            # none | full | dots
+    scan_layers: bool = True
+    logits_chunk: int = 0          # 0 -> unchunked CE; else seq-chunked CE
+    use_flash: bool = False        # Pallas flash-attention hot path (TPU)
+    attn_chunk: int = 0            # 0 -> naive sdpa; else q-chunked (memory-bounded)
+    mlstm_chunk: int = 1024        # chunked mLSTM when L > chunk (0 = never)
+    # dry-run knob: unroll structural loops (layers, q-chunks, microbatches)
+    # so compiled.cost_analysis() counts every iteration — XLA's cost model
+    # visits a while body ONCE, which would undercount scanned FLOPs by ~L.
+    unroll_loops: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ------------------------------------------------------------ param trees ----
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    """Declarative leaf: shape + logical sharding axes (+ init scale)."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    scale: float = 0.02
+    dtype: Any = None  # defaults to cfg param dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def tree_specs(spec_tree) -> Any:
+    """Strip to a ShapeDtypeStruct tree (abstract params for the dry-run)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        spec_tree, is_leaf=lambda x: isinstance(x, Spec))
+
+
+def tree_axes(spec_tree) -> Any:
+    """Parallel tree of logical-axis tuples."""
+    return jax.tree.map(lambda s: s.axes, spec_tree,
+                        is_leaf=lambda x: isinstance(x, Spec))
+
+
+def init_tree(spec_tree, key: jax.Array) -> Any:
+    """Materialize parameters (truncated-normal fan-in style)."""
+    leaves, treedef = jax.tree.flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, Spec))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for s, k in zip(leaves, keys):
+        if s.scale == 0.0:
+            out.append(jnp.zeros(s.shape, s.dtype))
+        elif s.scale == 1.0 and len(s.shape) == 1:
+            out.append(jnp.ones(s.shape, s.dtype))
+        else:
+            out.append(s.scale * jax.random.truncated_normal(
+                k, -2.0, 2.0, s.shape, jnp.float32).astype(s.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def n_params(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=lambda x: isinstance(x, Spec))
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+def spec_with_dtype(spec_tree, dtype) -> Any:
+    return jax.tree.map(
+        lambda s: dataclasses.replace(s, dtype=dtype) if s.dtype is None else s,
+        spec_tree, is_leaf=lambda x: isinstance(x, Spec))
+
+
+# ---------------------------------------------------------------- helpers ----
+def maybe_scan(cfg: ModelConfig, body, init, xs, length: int | None = None):
+    """``lax.scan``, or an unrolled python loop when ``cfg.unroll_loops``.
+
+    Only for STRUCTURAL loops with static trip counts (layer stacks,
+    attention q-chunks, CE chunks, microbatches) — never for token-level
+    recurrences. Unrolling exists so the dry-run's cost analysis is exact.
+    """
+    if not cfg.unroll_loops:
+        return jax.lax.scan(body, init, xs, length=length)
+    n = length if xs is None else jax.tree.leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(n):
+        xi = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if all(y is None for y in ys):
+        return carry, None
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *ys)
+    return carry, stacked
+
+
+def dense_spec(d_in: int, d_out: int, axes=("embed", "mlp"), scale=None) -> Spec:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return Spec((d_in, d_out), axes, scale)
+
+
+def norm_spec(d: int, axis: str | None = None) -> Spec:
+    return Spec((d,), (axis,), scale=1.0)
+
+
+def activation(name: str) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "gelu_mlp": jax.nn.gelu, "relu": jax.nn.relu}[name]

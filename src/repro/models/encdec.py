@@ -1,0 +1,204 @@
+"""Encoder-decoder assembly (seamless-m4t backbone).
+
+Speech frontend is a STUB per the assignment: ``input_specs()`` supplies
+precomputed frame embeddings (B, S_src, frame_dim); a linear projection lifts
+them to d_model. Encoder: bidirectional self-attention blocks. Decoder:
+causal self-attention + cross-attention + MLP blocks. Both stacks scan over
+stacked layer params like the decoder-only path.
+
+Fidelity notes (DESIGN.md §5): RoPE replaces seamless's learned/relative
+positions; the conformer conv module of the speech encoder is outside the
+assigned backbone spec (12L transformer enc-dec, d=1024, 16H, ff=4096).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import ModelConfig, Spec, dense_spec, norm_spec
+from repro.models.layers import (chunked_ce_loss, embed, embed_specs, mlp,
+                                 mlp_specs, rmsnorm, unembed)
+from repro.sharding.rules import shard as _shard
+
+SDS = jax.ShapeDtypeStruct
+
+
+# ------------------------------------------------------------------ blocks ----
+def enc_block_specs(cfg: ModelConfig) -> dict:
+    return {"ln1": norm_spec(cfg.d_model), "attn": attn.gqa_specs(cfg),
+            "ln2": norm_spec(cfg.d_model), "mlp": mlp_specs(cfg)}
+
+
+def enc_block_fwd(p, cfg: ModelConfig, x):
+    """Bidirectional self-attention + MLP."""
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    B, S, _ = h.shape
+    pos = jnp.arange(S)[None, :].astype(jnp.int32)
+    q, k, v = attn._qkv(p["attn"], cfg, h, pos)
+    q = _shard(q, ("batch", None, "heads", None))
+    a = attn.sdpa(q, k, v, None)  # no mask: bidirectional
+    a = jnp.einsum("bshk,hkd->bsd", a, p["attn"]["wo"].astype(h.dtype))
+    x = _shard(x + a, ("batch", "act_seq", None))
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    return _shard(x + mlp(p["mlp"], cfg, h), ("batch", "act_seq", None))
+
+
+def dec_block_specs(cfg: ModelConfig) -> dict:
+    return {"ln1": norm_spec(cfg.d_model), "attn": attn.gqa_specs(cfg),
+            "lnx": norm_spec(cfg.d_model), "xattn": attn.cross_specs(cfg),
+            "ln2": norm_spec(cfg.d_model), "mlp": mlp_specs(cfg)}
+
+
+def _cross_kv(p, memory):
+    dt = memory.dtype
+    k = jnp.einsum("bsd,dhk->bshk", memory, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", memory, p["wv"].astype(dt))
+    return k, v
+
+
+def _cross_apply(p, x, k, v, scale=None):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    out = attn.sdpa(q, k.astype(dt), v.astype(dt), None, scale)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
+def dec_block_fwd(p, cfg: ModelConfig, x, memory):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    a = attn.gqa_attention(p["attn"], cfg, h)            # causal (chunked OK)
+    x = _shard(x + a, ("batch", "act_seq", None))
+    h = rmsnorm(x, p["lnx"], cfg.norm_eps)
+    k, v = _cross_kv(p["xattn"], memory)
+    x = _shard(x + _cross_apply(p["xattn"], h, k, v), ("batch", "act_seq", None))
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    return _shard(x + mlp(p["mlp"], cfg, h), ("batch", "act_seq", None))
+
+
+def dec_block_prefill(p, cfg, x, memory, max_len: int):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    a, (sk, sv) = attn.gqa_prefill(p["attn"], cfg, h)
+    from repro.models.transformer import _pad_len
+    cache = {"k": _pad_len(sk, max_len), "v": _pad_len(sv, max_len)}
+    x = x + a
+    h = rmsnorm(x, p["lnx"], cfg.norm_eps)
+    ck, cv = _cross_kv(p["xattn"], memory)
+    cache["xk"], cache["xv"] = ck, cv
+    x = x + _cross_apply(p["xattn"], h, ck, cv)
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    return x + mlp(p["mlp"], cfg, h), cache
+
+
+def dec_block_decode(p, cfg, x, cache, pos):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    a, (sk, sv) = attn.gqa_decode(p["attn"], cfg, h,
+                                  (cache["k"], cache["v"]), pos)
+    x = x + a
+    h = rmsnorm(x, p["lnx"], cfg.norm_eps)
+    x = x + _cross_apply(p["xattn"], h, cache["xk"], cache["xv"])
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    return x + mlp(p["mlp"], cfg, h), {"k": sk, "v": sv,
+                                       "xk": cache["xk"], "xv": cache["xv"]}
+
+
+# ------------------------------------------------------------------- model ----
+def encdec_specs(cfg: ModelConfig) -> dict:
+    from repro.models.transformer import _stack_specs
+    return {
+        "embed": embed_specs(cfg),
+        "frontend": dense_spec(cfg.vision_width, cfg.d_model, ("embed", None)),
+        "enc": _stack_specs(enc_block_specs(cfg), cfg.n_enc_layers),
+        "enc_norm": norm_spec(cfg.d_model),
+        "dec": _stack_specs(dec_block_specs(cfg), cfg.n_layers),
+        "final_norm": norm_spec(cfg.d_model),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, S_src, frame_dim) stub embeddings -> (B, S_src, d)."""
+    x = frames.astype(cfg.cdtype) @ params["frontend"].astype(cfg.cdtype)
+    x = _shard(x, ("batch", "act_seq", None))
+
+    def body(c, lp):
+        return enc_block_fwd(lp, cfg, c), None
+
+    from repro.models.transformer import _maybe_remat
+    from repro.models.common import maybe_scan
+    x, _ = maybe_scan(cfg, _maybe_remat(body, cfg), x, params["enc"])
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def encdec_hidden(params, cfg: ModelConfig, frames, tokens):
+    memory = encode(params, cfg, frames)
+    x = embed(params["embed"], tokens, cfg)
+    x = _shard(x, ("batch", "act_seq", None))
+
+    def body(c, lp):
+        return dec_block_fwd(lp, cfg, c, memory), None
+
+    from repro.models.transformer import _maybe_remat
+    from repro.models.common import maybe_scan
+    x, _ = maybe_scan(cfg, _maybe_remat(body, cfg), x, params["dec"])
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+
+def encdec_loss(params, cfg: ModelConfig, batch: dict) -> jnp.ndarray:
+    hidden = encdec_hidden(params, cfg, batch["frames"], batch["tokens"])
+    return chunked_ce_loss(params["embed"], cfg, hidden, batch["labels"],
+                           batch.get("mask"))
+
+
+# ------------------------------------------------------------------- serve ----
+def encdec_cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                       src_len: int, dtype=None) -> dict:
+    dtype = dtype or cfg.cdtype
+    H, hd = cfg.n_heads, cfg.hd
+    Hkv = cfg.n_kv_heads
+    per_layer = {
+        "k": (SDS((batch, max_len, Hkv, hd), dtype),
+              ("batch", "kv_len", "kv_heads", None)),
+        "v": (SDS((batch, max_len, Hkv, hd), dtype),
+              ("batch", "kv_len", "kv_heads", None)),
+        "xk": (SDS((batch, src_len, H, hd), dtype),
+               ("batch", None, "heads", None)),
+        "xv": (SDS((batch, src_len, H, hd), dtype),
+               ("batch", None, "heads", None)),
+    }
+    from repro.models.transformer import _stack_cache_specs
+    return {"dec": _stack_cache_specs(per_layer, cfg.n_layers)}
+
+
+def encdec_init_cache(cfg, batch, max_len, src_len, dtype=None):
+    from repro.models.transformer import _is_cache_leaf
+    specs = encdec_cache_specs(cfg, batch, max_len, src_len, dtype)
+    return jax.tree.map(lambda t: jnp.zeros(t[0].shape, t[0].dtype),
+                        specs, is_leaf=_is_cache_leaf)
+
+
+def encdec_prefill(params, cfg: ModelConfig, frames, tokens, max_len: int):
+    memory = encode(params, cfg, frames)
+    x = embed(params["embed"], tokens, cfg)
+
+    def body(c, lp):
+        return dec_block_prefill(lp, cfg, c, memory, max_len)
+
+    from repro.models.common import maybe_scan
+    x, caches = maybe_scan(cfg, body, x, params["dec"])
+    h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params["embed"], h[:, -1:, :], cfg), {"dec": caches}
+
+
+def encdec_decode(params, cfg: ModelConfig, token, pos, cache: dict):
+    x = embed(params["embed"], token, cfg)
+
+    def body(c, inp):
+        lp, lc = inp
+        return dec_block_decode(lp, cfg, c, lc, pos)
+
+    from repro.models.common import maybe_scan
+    x, new = maybe_scan(cfg, body, x, (params["dec"], cache["dec"]))
+    h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params["embed"], h, cfg), {"dec": new}

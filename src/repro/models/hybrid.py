@@ -1,0 +1,109 @@
+"""zamba2 hybrid segments: `attn_every` Mamba-2 blocks + one SHARED dense
+(attention+MLP) block, alternating between ``n_shared_blocks`` weight sets.
+
+The shared blocks' parameters live outside the segment scan (they are reused
+by every segment — the arch's defining trick); inside the scan the segment
+index picks which of the stacked shared sets to apply. Each segment still
+keeps its *own* attention KV cache (weights are shared, activations are not).
+
+Simplification vs the released zamba2 (noted in DESIGN.md §5): the shared
+block consumes the residual stream directly instead of concat(x, embeddings)
++ re-projection, and per-invocation LoRA deltas on the shared weights are
+omitted.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import maybe_scan
+
+
+def _tfm():
+    from repro.models import transformer as tfm  # lazy: avoid import cycle
+    return tfm
+
+
+def zamba_seg_specs(cfg) -> dict:
+    tfm = _tfm()
+    return {"mamba": tfm._stack_specs(tfm.mamba_block_specs(cfg),
+                                      cfg.attn_every)}
+
+
+def zamba_seg_cache_specs(cfg, batch: int, max_len: int, dtype) -> dict:
+    tfm = _tfm()
+    return {
+        "mamba": tfm._stack_cache_specs(
+            tfm.mamba_block_cache_specs(cfg, batch, max_len, dtype),
+            cfg.attn_every),
+        "attn": tfm.dense_block_cache_specs(cfg, batch, max_len, dtype),
+    }
+
+
+def _pick_shared(shared, i, n_shared: int):
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, i % n_shared, 0,
+                                               keepdims=False), shared)
+
+
+def zamba_seg_scan(stage_params, cfg, x, shared, maybe_remat, prefix_len=0):
+    tfm = _tfm()
+    nseg = jax.tree.leaves(stage_params)[0].shape[0]
+
+    def seg_body(c, inp):
+        seg_p, i = inp
+
+        def inner(cc, lp):
+            return tfm.mamba_block_fwd(lp, cfg, cc), None
+
+        c, _ = maybe_scan(cfg, inner, c, seg_p["mamba"])
+        blk = _pick_shared(shared, i, cfg.n_shared_blocks)
+        return tfm.dense_block_fwd(blk, cfg, c, prefix_len), None
+
+    body = maybe_remat(seg_body, cfg)
+    x, _ = maybe_scan(cfg, body, x, (stage_params,
+                                       jnp.arange(nseg, dtype=jnp.int32)))
+    return x
+
+
+def zamba_seg_prefill_scan(stage_params, cfg, x, shared, max_len: int):
+    tfm = _tfm()
+    nseg = jax.tree.leaves(stage_params)[0].shape[0]
+
+    def seg_body(c, inp):
+        seg_p, i = inp
+
+        def inner(cc, lp):
+            return tfm.mamba_block_prefill(lp, cfg, cc, max_len)
+
+        c, m_caches = maybe_scan(cfg, inner, c, seg_p["mamba"])
+        blk = _pick_shared(shared, i, cfg.n_shared_blocks)
+        c, a_cache = tfm.dense_block_prefill(blk, cfg, c, max_len)
+        return c, {"mamba": m_caches, "attn": a_cache}
+
+    x, caches = maybe_scan(cfg, seg_body, x,
+                           (stage_params, jnp.arange(nseg, dtype=jnp.int32)))
+    return x, caches
+
+
+def zamba_seg_decode_scan(stage_params, cfg, x, stage_cache, shared, pos):
+    tfm = _tfm()
+    nseg = jax.tree.leaves(stage_params)[0].shape[0]
+
+    def seg_body(c, inp):
+        seg_p, seg_c, i = inp
+
+        def inner(cc, lp_lc):
+            lp, lc = lp_lc
+            return tfm.mamba_block_decode(lp, cfg, cc, lc, pos)
+
+        c, m_caches = maybe_scan(cfg, inner, c, (seg_p["mamba"], seg_c["mamba"]))
+        blk = _pick_shared(shared, i, cfg.n_shared_blocks)
+        c, a_cache = tfm.dense_block_decode(blk, cfg, c, seg_c["attn"], pos)
+        return c, {"mamba": m_caches, "attn": a_cache}
+
+    x, new_cache = maybe_scan(
+        cfg, seg_body, x,
+        (stage_params, stage_cache, jnp.arange(nseg, dtype=jnp.int32)))
+    return x, new_cache

@@ -1,0 +1,146 @@
+"""Shared neural building blocks: norms, RoPE, MLPs, embeddings, losses."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, Spec, activation, dense_spec, norm_spec
+from repro.sharding.rules import shard as _shard
+
+
+# -------------------------------------------------------------------- norm ----
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * w.astype(dt)
+
+
+def layernorm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * w.astype(dt) + b.astype(dt)
+
+
+# -------------------------------------------------------------------- rope ----
+def rope_freqs(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd) rotated pairwise; pos: (..., S) int positions."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    ang = pos[..., None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]                            # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(pos: jnp.ndarray, d: int) -> jnp.ndarray:
+    """(S,) positions -> (S, d) sinusoidal embeddings (seamless/encdec)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------- mlp ----
+def mlp_specs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    if cfg.act in ("silu", "gelu"):  # gated (SwiGLU/GeGLU)
+        return {"wg": dense_spec(d, ff, ("embed", "mlp")),
+                "wu": dense_spec(d, ff, ("embed", "mlp")),
+                "wd": dense_spec(ff, d, ("mlp", "embed"))}
+    return {"wu": dense_spec(d, ff, ("embed", "mlp")),
+            "wd": dense_spec(ff, d, ("mlp", "embed"))}
+
+
+def mlp(params: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    act = activation(cfg.act)
+    if "wg" in params:
+        h = act(x @ params["wg"].astype(x.dtype)) * (x @ params["wu"].astype(x.dtype))
+    else:
+        h = act(x @ params["wu"].astype(x.dtype))
+    h = _shard(h, ("batch", None, "mlp"))
+    return h @ params["wd"].astype(x.dtype)
+
+
+# -------------------------------------------------------------- embeddings ----
+def embed_specs(cfg: ModelConfig) -> dict:
+    s = {"embedding": Spec((cfg.vocab, cfg.d_model), ("vocab", "embed"), 0.02)}
+    if not cfg.tie_embeddings:
+        s["unembed"] = Spec((cfg.d_model, cfg.vocab), ("embed", "vocab"),
+                            1.0 / (cfg.d_model ** 0.5))
+    return s
+
+
+def embed(params: dict, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    x = jnp.take(params["embedding"], tokens, axis=0).astype(cfg.cdtype)
+    return _shard(x, ("batch", None, None))
+
+
+def unembed(params: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        w = params["embedding"].T.astype(x.dtype)
+    else:
+        w = params["unembed"].astype(x.dtype)
+    logits = x @ w
+    return _shard(logits, ("batch", None, "vocab"))
+
+
+# -------------------------------------------------------------------- loss ----
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Token-mean CE in fp32; logits (B,S,V), targets (B,S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return nll.mean()
+    m = mask.astype(jnp.float32)
+    return (nll * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+
+def chunked_ce_loss(params: dict, cfg: ModelConfig, x: jnp.ndarray,
+                    targets: jnp.ndarray, mask: jnp.ndarray | None) -> jnp.ndarray:
+    """CE with the unembed applied per sequence chunk (bounds logits memory).
+
+    At train_4k × 152k vocab the full logits tensor is ~TBs; chunking the
+    sequence axis keeps the live logits block at chunk×V. Grad flows through
+    the scan; FLOPs are unchanged (roofline-neutral, memory-term win).
+    """
+    B, S, D = x.shape
+    ck = cfg.logits_chunk
+    if ck <= 0 or S % ck != 0 or S == ck:
+        return cross_entropy(unembed(params, x, cfg), targets, mask)
+    n = S // ck
+    xs = x.reshape(B, n, ck, D).swapaxes(0, 1)            # (n, B, ck, D)
+    ts = targets.reshape(B, n, ck).swapaxes(0, 1)
+    ms = (mask.reshape(B, n, ck).swapaxes(0, 1) if mask is not None
+          else jnp.ones((n, B, ck), jnp.float32))
+
+    @jax.checkpoint  # recompute chunk logits in bwd: without this the scan
+    def step(carry, inp):  # would SAVE every chunk's logits = full logits
+        xs_c, ts_c, ms_c = inp
+        logits = unembed(params, xs_c, cfg).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, ts_c[..., None], axis=-1)[..., 0]
+        nll_sum, m_sum = carry
+        m = ms_c.astype(jnp.float32)
+        return (nll_sum + ((lse - ll) * m).sum(), m_sum + m.sum()), None
+
+    from repro.models.common import maybe_scan
+    (nll, msum), _ = maybe_scan(cfg, step,
+                                (jnp.float32(0.0), jnp.float32(0.0)),
+                                (xs, ts, ms))
+    return nll / jnp.maximum(msum, 1.0)

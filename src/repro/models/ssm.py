@@ -1,0 +1,189 @@
+"""Mamba-2 (SSD) block: chunked state-space dual scan + causal conv + gating.
+
+Implements the SSD algorithm (Dao & Gu, arXiv:2405.21060) in its chunked
+form: intra-chunk quadratic term + inter-chunk state scan. Scalar-per-head
+decay A, d_state=N per single group, headdim=P.
+
+Train path: (B, L, d) with L a multiple of cfg.ssm_chunk.
+Decode path: single-token recurrence with carried (state, conv) cache.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, Spec, dense_spec, norm_spec
+from repro.models.layers import rmsnorm
+from repro.sharding.rules import shard as _shard
+
+
+def ssm_dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_headdim
+    return d_inner, H, cfg.ssm_headdim, cfg.ssm_state
+
+
+def mamba2_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_inner, H, P, N = ssm_dims(cfg)
+    K = cfg.ssm_conv
+    conv_dim = d_inner + 2 * N
+    return {
+        "w_z": dense_spec(d, d_inner, ("embed", "mlp")),
+        "w_x": dense_spec(d, d_inner, ("embed", "mlp")),
+        "w_B": dense_spec(d, N, ("embed", None)),
+        "w_C": dense_spec(d, N, ("embed", None)),
+        "w_dt": dense_spec(d, H, ("embed", "ssm_heads")),
+        "dt_bias": Spec((H,), ("ssm_heads",), 0.0),
+        "A_log": Spec((H,), ("ssm_heads",), scale=1.0),  # A = -exp(A_log)
+        "D": Spec((H,), ("ssm_heads",), scale=1.0),
+        "w_conv": Spec((K, conv_dim), ("conv", None), 1.0 / math.sqrt(K)),
+        "b_conv": Spec((conv_dim,), (None,), 0.0),
+        "norm": norm_spec(d_inner),
+        "w_out": dense_spec(d_inner, d, ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. x: (B,L,C), w: (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad, w[:, None, :].astype(x.dtype),  # (K, 1, C) KIO
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return out + b.astype(x.dtype)
+
+
+def _projections(params, cfg: ModelConfig, x: jnp.ndarray):
+    d_inner, H, P, N = ssm_dims(cfg)
+    dt_ = x.dtype
+    z = x @ params["w_z"].astype(dt_)
+    xs = x @ params["w_x"].astype(dt_)
+    Bm = x @ params["w_B"].astype(dt_)
+    Cm = x @ params["w_C"].astype(dt_)
+    dt = jax.nn.softplus(
+        (x @ params["w_dt"].astype(dt_)).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32))
+    return z, xs, Bm, Cm, dt
+
+
+def mamba2_forward(params, cfg: ModelConfig, x: jnp.ndarray,
+                   return_cache: bool = False):
+    """Full-sequence SSD. x: (B, L, d) -> (B, L, d) [, decode cache]."""
+    Bsz, L, d = x.shape
+    d_inner, H, P, N = ssm_dims(cfg)
+    Q = min(cfg.ssm_chunk, L)      # short sequences: one chunk
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+
+    z, xs, Bm, Cm, dt = _projections(params, cfg, x)
+    cat_pre = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    cat = jax.nn.silu(_causal_conv(cat_pre, params["w_conv"], params["b_conv"]))
+    xs, Bm, Cm = jnp.split(cat, [d_inner, d_inner + N], axis=-1)
+
+    xs = _shard(xs.reshape(Bsz, L, H, P), ("batch", None, "ssm_heads", None))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))     # (H,)
+    log_a = dt * A                                         # (B,L,H) fp32, <=0
+    xbar = xs * dt.astype(xs.dtype)[..., None]             # (B,L,H,P)
+
+    # chunk
+    log_a = log_a.reshape(Bsz, nc, Q, H)
+    cs = jnp.cumsum(log_a, axis=2)                         # inclusive
+    xbar = xbar.reshape(Bsz, nc, Q, H, P)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    # ---- intra-chunk (quadratic) ----
+    tri = jnp.tril(jnp.ones((Q, Q), dtype=bool))
+    # decay exp(cs_i - cs_j) for j <= i
+    ddecay = jnp.where(tri[None, None, :, :, None],
+                       jnp.exp(jnp.clip(cs[:, :, :, None, :]
+                                        - cs[:, :, None, :, :], -60.0, 0.0)),
+                       0.0).astype(x.dtype)                # (B,nc,Q,Q,H)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)             # (B,nc,Q,Q)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, ddecay, xbar)
+
+    # ---- chunk states ----
+    to_end = jnp.exp(jnp.clip(cs[:, :, -1:, :] - cs, -60.0, 0.0)).astype(x.dtype)
+    S_chunk = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bc, to_end, xbar)
+
+    # ---- inter-chunk state passing as a triangular MATMUL (scan-free) ----
+    # The sequential chunk scan becomes S_prev[c] = sum_{c'<c} exp(G[c-1] -
+    # G[c']) * S_chunk[c'] with G the chunk-boundary cumulative log decay.
+    # One (nc x nc) masked matmul replaces nc dependent steps: MXU-friendly,
+    # overlappable, and exact under HLO cost analysis (no while loop).
+    from_start = jnp.exp(jnp.clip(cs, -60.0, 0.0)).astype(x.dtype)  # (B,nc,Q,H)
+    G = jnp.cumsum(cs[:, :, -1, :], axis=1)                # (B,nc,H) fp32
+    Gprev = jnp.pad(G[:, :-1], ((0, 0), (1, 0), (0, 0)))   # G[c-1]; 0 at c=0
+    diff = Gprev[:, :, None, :] - G[:, None, :, :]         # (B,nc,nc,H)
+    ctri = jnp.tril(jnp.ones((nc, nc), dtype=bool), k=-1)  # strictly lower
+    T = jnp.where(ctri[None, :, :, None],
+                  jnp.exp(jnp.clip(diff, -60.0, 0.0)), 0.0).astype(x.dtype)
+    S_prev = jnp.einsum("bcCh,bChnp->bchnp", T, S_chunk)   # (B,nc,H,N,P)
+    y_inter = jnp.einsum("bcin,bchnp->bcihp", Cc, S_prev) \
+        * from_start[..., None]                            # (B,nc,Q,H,P)
+    w_final = jnp.exp(jnp.clip(G[:, -1:, :] - G, -60.0, 0.0)).astype(x.dtype)
+    S_final = jnp.einsum("bch,bchnp->bhnp", w_final, S_chunk)
+
+    y = (y_intra + y_inter).reshape(Bsz, L, H, P)
+    y = y + params["D"].astype(x.dtype)[None, None, :, None] * xs
+    y = y.reshape(Bsz, L, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = y @ params["w_out"].astype(x.dtype)
+    if return_cache:
+        cache = {"state": S_final, "conv": cat_pre[:, L - (cfg.ssm_conv - 1):, :]}
+        return out, cache
+    return out
+
+
+# ------------------------------------------------------------------ decode ----
+def mamba2_init_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d_inner, H, P, N = ssm_dims(cfg)
+    conv_dim = d_inner + 2 * N
+    return {
+        "state": jnp.zeros((batch, H, N, P), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }
+
+
+def mamba2_cache_specs(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d_inner, H, P, N = ssm_dims(cfg)
+    conv_dim = d_inner + 2 * N
+    return {
+        "state": (jax.ShapeDtypeStruct((batch, H, N, P), dtype),
+                  ("batch", "ssm_heads", None, None)),
+        "conv": (jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+                 ("batch", None, None)),
+    }
+
+
+def mamba2_decode(params, cfg: ModelConfig, x: jnp.ndarray, cache: dict):
+    """Single-token step. x: (B,1,d) -> (B,1,d), updated cache."""
+    Bsz = x.shape[0]
+    d_inner, H, P, N = ssm_dims(cfg)
+    z, xs, Bm, Cm, dt = _projections(params, cfg, x)
+    cat = jnp.concatenate([xs, Bm, Cm], axis=-1)[:, 0]      # (B, conv_dim)
+    window = jnp.concatenate([cache["conv"], cat[:, None, :]], axis=1)  # (B,K,Cd)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(x.dtype),
+                          params["w_conv"].astype(x.dtype)) + params["b_conv"].astype(x.dtype)
+    cat = jax.nn.silu(conv_out)
+    xs, Bm, Cm = jnp.split(cat, [d_inner, d_inner + N], axis=-1)
+    xs = xs.reshape(Bsz, H, P)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt[:, 0] * A).astype(x.dtype)               # (B,H)
+    xbar = xs * dt[:, 0].astype(x.dtype)[..., None]         # (B,H,P)
+    S = cache["state"].astype(x.dtype)
+    S = a[:, :, None, None] * S + jnp.einsum("bn,bhp->bhnp", Bm, xbar)
+    y = jnp.einsum("bn,bhnp->bhp", Cm, S)
+    y = y + params["D"].astype(x.dtype)[None, :, None] * xs
+    y = y.reshape(Bsz, 1, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = y @ params["w_out"].astype(x.dtype)
+    new_cache = {"state": S.astype(cache["state"].dtype),
+                 "conv": window[:, 1:].astype(cache["conv"].dtype)}
+    return out, new_cache

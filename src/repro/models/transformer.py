@@ -1,0 +1,427 @@
+"""Decoder-only LM assembly: staged scan-over-layers, remat, cache plumbing.
+
+A model is a list of *stages*; each stage is `count` copies of one block
+`kind` with parameters stacked along a leading ``layers`` axis and applied
+under ``lax.scan`` (keeps HLO compact for 30-94 layer models — critical for
+the 512-device dry-run compile). Heterogeneous families (hybrid zamba2,
+xlstm) are expressed as composite segment kinds so each stage stays
+scan-homogeneous.
+
+Three entry points per model: ``lm_loss`` (training), ``lm_prefill`` and
+``lm_decode`` (serving, explicit cache trees). The cache tree mirrors the
+stage structure so the same scan drives all three.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.common import (ModelConfig, Spec, dense_spec, maybe_scan,
+                                 norm_spec)
+from repro.models.layers import (chunked_ce_loss, embed, embed_specs, mlp,
+                                 mlp_specs, rmsnorm, unembed)
+from repro.sharding.rules import shard as _shard
+
+SDS = jax.ShapeDtypeStruct
+
+
+# ------------------------------------------------------------- layer plan ----
+def layer_plan(cfg: ModelConfig) -> list[tuple[str, int]]:
+    """[(kind, count)] stages; each stage is one homogeneous scan."""
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return [("dense", cfg.n_layers)]
+    if fam == "moe":
+        plan = []
+        if cfg.n_dense_layers:
+            plan.append(("dense", cfg.n_dense_layers))
+        plan.append(("moe", cfg.n_layers - cfg.n_dense_layers))
+        return plan
+    if fam == "ssm":
+        return [("mamba", cfg.n_layers)]
+    if fam == "xlstm":
+        k = cfg.slstm_every
+        segs, rem = divmod(cfg.n_layers, k)
+        plan = []
+        if segs:
+            plan.append(("xlstm_seg", segs))
+        if rem:
+            plan.append(("mlstm", rem))
+        return plan
+    if fam == "hybrid":
+        k = cfg.attn_every
+        segs, rem = divmod(cfg.n_layers, k)
+        plan = []
+        if segs:
+            plan.append(("zamba_seg", segs))
+        if rem:
+            plan.append(("mamba", rem))
+        return plan
+    raise ValueError(f"unknown family {fam}")
+
+
+def _stack_specs(tree, n: int):
+    return jax.tree.map(
+        lambda s: dataclasses.replace(s, shape=(n, *s.shape),
+                                      axes=("layers", *s.axes)),
+        tree, is_leaf=lambda x: isinstance(x, Spec))
+
+
+def _is_cache_leaf(x) -> bool:
+    return (isinstance(x, tuple) and len(x) == 2
+            and isinstance(x[0], jax.ShapeDtypeStruct))
+
+
+def _stack_cache_specs(tree, n: int):
+    return jax.tree.map(
+        lambda t: (SDS((n, *t[0].shape), t[0].dtype), ("layers", *t[1])),
+        tree, is_leaf=_is_cache_leaf)
+
+
+def _maybe_remat(f, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(f)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return f
+
+
+def _edge(x):
+    return _shard(x, ("batch", "act_seq", None))
+
+
+# ------------------------------------------------------------ block: dense ----
+def dense_block_specs(cfg: ModelConfig, use_moe: bool = False) -> dict:
+    d = cfg.d_model
+    s = {"ln1": norm_spec(d), "ln2": norm_spec(d)}
+    s["attn"] = attn.mla_specs(cfg) if cfg.use_mla else attn.gqa_specs(cfg)
+    if use_moe:
+        s["moe"] = moe_mod.moe_specs(cfg)
+    else:
+        s["mlp"] = mlp_specs(cfg)
+    return s
+
+
+def dense_block_fwd(p, cfg: ModelConfig, x, prefix_len=0):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        a = attn.mla_attention(p["attn"], cfg, h)
+    elif isinstance(prefix_len, int) and prefix_len == 0:
+        a = attn.gqa_attention(p["attn"], cfg, h)
+    else:
+        a = attn.gqa_prefix_attention(p["attn"], cfg, h, prefix_len)
+    x = _edge(x + a)
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    f = (moe_mod.moe_ffn(p["moe"], cfg, h) if "moe" in p
+         else mlp(p["mlp"], cfg, h))
+    return _edge(x + f)
+
+
+def dense_block_cache_specs(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    if cfg.use_mla:
+        return {
+            "c_kv": (SDS((batch, max_len, cfg.kv_lora_rank), dtype),
+                     ("batch", "kv_len", None)),
+            "k_pe": (SDS((batch, max_len, cfg.qk_rope_head_dim), dtype),
+                     ("batch", "kv_len", None)),
+        }
+    return {
+        "k": (SDS((batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+              ("batch", "kv_len", "kv_heads", None)),
+        "v": (SDS((batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+              ("batch", "kv_len", "kv_heads", None)),
+    }
+
+
+def dense_block_prefill(p, cfg: ModelConfig, x, max_len: int, prefix_len=0):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        a, (c_kv, k_pe) = attn.mla_prefill(p["attn"], cfg, h)
+        cache = {"c_kv": _pad_len(c_kv, max_len), "k_pe": _pad_len(k_pe, max_len)}
+    else:
+        # prefix_len rides through run_attention so the q-chunked path can
+        # build the prefix-LM mask per chunk (never an (S,S) materialization)
+        a, (k, v) = attn.gqa_prefill(p["attn"], cfg, h, prefix_len=prefix_len)
+        cache = {"k": _pad_len(k, max_len), "v": _pad_len(v, max_len)}
+    x = _edge(x + a)
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    f = (moe_mod.moe_ffn(p["moe"], cfg, h) if "moe" in p
+         else mlp(p["mlp"], cfg, h))
+    return _edge(x + f), cache
+
+
+def dense_block_decode(p, cfg: ModelConfig, x, cache, pos):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        a, (c_kv, k_pe) = attn.mla_decode(p["attn"], cfg, h,
+                                          (cache["c_kv"], cache["k_pe"]), pos)
+        cache = {"c_kv": c_kv, "k_pe": k_pe}
+    else:
+        a, (k, v) = attn.gqa_decode(p["attn"], cfg, h,
+                                    (cache["k"], cache["v"]), pos)
+        cache = {"k": k, "v": v}
+    x = x + a
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    f = (moe_mod.moe_ffn(p["moe"], cfg, h) if "moe" in p
+         else mlp(p["mlp"], cfg, h))
+    return x + f, cache
+
+
+def _pad_len(x, max_len: int):
+    """Pad a (B, S, ...) prefill cache out to the max_len buffer."""
+    S = x.shape[1]
+    if S == max_len:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[1] = (0, max_len - S)
+    return jnp.pad(x, pad)
+
+
+# ------------------------------------------------------------ block: mamba ----
+def mamba_block_specs(cfg: ModelConfig) -> dict:
+    return {"ln": norm_spec(cfg.d_model), "ssm": ssm_mod.mamba2_specs(cfg)}
+
+
+def mamba_block_fwd(p, cfg, x, prefix_len=0):
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    return _edge(x + ssm_mod.mamba2_forward(p["ssm"], cfg, h))
+
+
+def mamba_block_cache_specs(cfg, batch, max_len, dtype):
+    return ssm_mod.mamba2_cache_specs(cfg, batch, dtype)
+
+
+def mamba_block_prefill(p, cfg, x, max_len, prefix_len=0):
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    y, cache = ssm_mod.mamba2_forward(p["ssm"], cfg, h, return_cache=True)
+    return _edge(x + y), cache
+
+
+def mamba_block_decode(p, cfg, x, cache, pos):
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    y, cache = ssm_mod.mamba2_decode(p["ssm"], cfg, h, cache)
+    return x + y, cache
+
+
+# ------------------------------------------------------------ block: mlstm ----
+def mlstm_block_fwd(p, cfg, x, prefix_len=0):
+    return _edge(x + xlstm_mod.mlstm_forward(p, cfg, x))
+
+
+def mlstm_block_prefill(p, cfg, x, max_len, prefix_len=0):
+    y, cache = xlstm_mod.mlstm_prefill(p, cfg, x)
+    return _edge(x + y), cache
+
+
+def mlstm_block_decode(p, cfg, x, cache, pos):
+    y, cache = xlstm_mod.mlstm_decode(p, cfg, x, cache)
+    return x + y, cache
+
+
+# -------------------------------------------------------- block: xlstm_seg ----
+def xlstm_seg_specs(cfg: ModelConfig) -> dict:
+    k = cfg.slstm_every
+    return {"mlstm": _stack_specs(xlstm_mod.mlstm_specs(cfg), k - 1),
+            "slstm": xlstm_mod.slstm_specs(cfg)}
+
+
+def xlstm_seg_fwd(p, cfg, x, prefix_len=0):
+    def body(c, lp):
+        return mlstm_block_fwd(lp, cfg, c), None
+    x, _ = maybe_scan(cfg, body, x, p["mlstm"])
+    return _edge(x + xlstm_mod.slstm_forward(p["slstm"], cfg, x))
+
+
+def xlstm_seg_cache_specs(cfg, batch, max_len, dtype):
+    k = cfg.slstm_every
+    return {"mlstm": _stack_cache_specs(
+        xlstm_mod.mlstm_cache_specs(cfg, batch, dtype), k - 1),
+        "slstm": xlstm_mod.slstm_cache_specs(cfg, batch, dtype)}
+
+
+def xlstm_seg_prefill(p, cfg, x, max_len, prefix_len=0):
+    def body(c, lp):
+        return mlstm_block_prefill(lp, cfg, c, max_len)
+    x, m_caches = maybe_scan(cfg, body, x, p["mlstm"])
+    y, s_cache = xlstm_mod.slstm_prefill(p["slstm"], cfg, x)
+    return _edge(x + y), {"mlstm": m_caches, "slstm": s_cache}
+
+
+def xlstm_seg_decode(p, cfg, x, cache, pos):
+    def body(c, inp):
+        lp, lc = inp
+        return mlstm_block_decode(lp, cfg, c, lc, pos)
+    x, m_caches = maybe_scan(cfg, body, x, (p["mlstm"], cache["mlstm"]))
+    y, s_cache = xlstm_mod.slstm_decode(p["slstm"], cfg, x, cache["slstm"])
+    return x + y, {"mlstm": m_caches, "slstm": s_cache}
+
+
+# -------------------------------------------------------- block: zamba_seg ----
+# zamba2: `attn_every` mamba blocks then one of the n_shared_blocks shared
+# dense (attn+MLP) blocks, alternating — the shared params live OUTSIDE the
+# scanned stage (repro.models.hybrid wires them through).
+from repro.models import hybrid as hybrid_mod  # noqa: E402  (cycle-free: hybrid imports nothing from here at module scope)
+
+
+# ----------------------------------------------------------------- registry ----
+_BLOCKS: dict[str, dict[str, Any]] = {
+    "dense": dict(specs=lambda cfg: dense_block_specs(cfg, use_moe=False),
+                  fwd=dense_block_fwd, cache=dense_block_cache_specs,
+                  prefill=dense_block_prefill, decode=dense_block_decode),
+    "moe": dict(specs=lambda cfg: dense_block_specs(cfg, use_moe=True),
+                fwd=dense_block_fwd, cache=dense_block_cache_specs,
+                prefill=dense_block_prefill, decode=dense_block_decode),
+    "mamba": dict(specs=mamba_block_specs, fwd=mamba_block_fwd,
+                  cache=mamba_block_cache_specs, prefill=mamba_block_prefill,
+                  decode=mamba_block_decode),
+    "mlstm": dict(specs=xlstm_mod.mlstm_specs, fwd=mlstm_block_fwd,
+                  cache=lambda cfg, b, m, dt: xlstm_mod.mlstm_cache_specs(cfg, b, dt),
+                  prefill=mlstm_block_prefill, decode=mlstm_block_decode),
+    "xlstm_seg": dict(specs=xlstm_seg_specs, fwd=xlstm_seg_fwd,
+                      cache=xlstm_seg_cache_specs, prefill=xlstm_seg_prefill,
+                      decode=xlstm_seg_decode),
+    "zamba_seg": dict(specs=hybrid_mod.zamba_seg_specs,
+                      fwd=None,  # needs shared params; handled in _apply_stage
+                      cache=hybrid_mod.zamba_seg_cache_specs,
+                      prefill=None, decode=None),
+}
+
+
+# ------------------------------------------------------------------- specs ----
+def lm_specs(cfg: ModelConfig) -> dict:
+    p: dict[str, Any] = {"embed": embed_specs(cfg),
+                         "final_norm": norm_spec(cfg.d_model)}
+    for i, (kind, count) in enumerate(layer_plan(cfg)):
+        p[f"stage_{i}"] = _stack_specs(_BLOCKS[kind]["specs"](cfg), count)
+    if cfg.family == "hybrid":
+        p["shared"] = _stack_specs(dense_block_specs(cfg), cfg.n_shared_blocks)
+    if cfg.family == "vlm":
+        p["vision_proj"] = dense_spec(cfg.vision_width, cfg.d_model,
+                                      ("embed", None))
+    return p
+
+
+def lm_cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=None) -> dict:
+    dtype = dtype or cfg.cdtype
+    c: dict[str, Any] = {}
+    for i, (kind, count) in enumerate(layer_plan(cfg)):
+        c[f"stage_{i}"] = _stack_cache_specs(
+            _BLOCKS[kind]["cache"](cfg, batch, max_len, dtype), count)
+    return c
+
+
+def lm_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    specs = lm_cache_specs(cfg, batch, max_len, dtype)
+
+    # zero caches are valid starts everywhere: the mlstm/slstm stabilizer m
+    # only weights the (zero) C/n contributions, so m=0 is equivalent to -inf.
+    return jax.tree.map(lambda t: jnp.zeros(t[0].shape, t[0].dtype),
+                        specs, is_leaf=_is_cache_leaf)
+
+
+# ----------------------------------------------------------------- forward ----
+def _apply_stage(stage_params, cfg: ModelConfig, kind: str, x, prefix_len,
+                 shared=None):
+    if kind == "zamba_seg":
+        return hybrid_mod.zamba_seg_scan(stage_params, cfg, x, shared,
+                                         _maybe_remat, prefix_len)
+    fwd = _BLOCKS[kind]["fwd"]
+
+    def body(c, lp):
+        return fwd(lp, cfg, c, prefix_len), None
+
+    body = _maybe_remat(body, cfg)
+    x, _ = maybe_scan(cfg, body, x, stage_params)
+    return x
+
+
+def lm_hidden(params, cfg: ModelConfig, tokens: jnp.ndarray,
+              patches: jnp.ndarray | None = None) -> tuple[jnp.ndarray, Any]:
+    """Token (+ optional stub-modality prefix) -> final hidden states."""
+    x = embed(params["embed"], tokens, cfg)
+    prefix_len = 0
+    if cfg.family == "vlm":
+        assert patches is not None, "vlm needs stub patch embeddings"
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)   # gemma embed scaling
+        vis = (patches.astype(cfg.cdtype) @ params["vision_proj"].astype(cfg.cdtype))
+        x = jnp.concatenate([vis, x], axis=1)
+        prefix_len = patches.shape[1]
+    x = _edge(x)
+    for i, (kind, _) in enumerate(layer_plan(cfg)):
+        x = _apply_stage(params[f"stage_{i}"], cfg, kind, x, prefix_len,
+                         shared=params.get("shared"))
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps), prefix_len
+
+
+def lm_loss(params, cfg: ModelConfig, batch: dict) -> jnp.ndarray:
+    """batch: tokens (B,S), labels (B,S) [, patches (B,P,W), mask (B,S)]."""
+    hidden, prefix_len = lm_hidden(params, cfg, batch["tokens"],
+                                   batch.get("patches"))
+    if cfg.family == "vlm":           # loss over the text tail only
+        hidden = hidden[:, prefix_len:, :]
+    return chunked_ce_loss(params["embed"], cfg, hidden, batch["labels"],
+                           batch.get("mask"))
+
+
+# ------------------------------------------------------------------- serve ----
+def lm_prefill(params, cfg: ModelConfig, tokens: jnp.ndarray, max_len: int,
+               patches: jnp.ndarray | None = None):
+    """Process a prompt; return (last-position logits, cache tree)."""
+    x = embed(params["embed"], tokens, cfg)
+    prefix_len = 0
+    if cfg.family == "vlm":
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        vis = (patches.astype(cfg.cdtype) @ params["vision_proj"].astype(cfg.cdtype))
+        x = jnp.concatenate([vis, x], axis=1)
+        prefix_len = patches.shape[1]
+    x = _edge(x)
+    caches = {}
+    for i, (kind, _) in enumerate(layer_plan(cfg)):
+        if kind == "zamba_seg":
+            x, caches[f"stage_{i}"] = hybrid_mod.zamba_seg_prefill_scan(
+                params[f"stage_{i}"], cfg, x, params["shared"], max_len)
+            continue
+        pf = _BLOCKS[kind]["prefill"]
+
+        def body(c, lp, pf=pf):
+            return pf(lp, cfg, c, max_len, prefix_len)
+
+        x, caches[f"stage_{i}"] = maybe_scan(cfg, body, x, params[f"stage_{i}"])
+    h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], h[:, -1:, :], cfg)
+    return logits, caches
+
+
+def lm_decode(params, cfg: ModelConfig, token: jnp.ndarray, pos, cache: dict):
+    """One decode step. token: (B,1) ids; pos: scalar position; cache in/out."""
+    x = embed(params["embed"], token, cfg)
+    if cfg.family == "vlm":
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    new_cache = {}
+    for i, (kind, _) in enumerate(layer_plan(cfg)):
+        if kind == "zamba_seg":
+            x, new_cache[f"stage_{i}"] = hybrid_mod.zamba_seg_decode_scan(
+                params[f"stage_{i}"], cfg, x, cache[f"stage_{i}"],
+                params["shared"], pos)
+            continue
+        dec = _BLOCKS[kind]["decode"]
+
+        def body(c, inp, dec=dec):
+            lp, lc = inp
+            return dec(lp, cfg, c, lc, pos)
+
+        x, new_cache[f"stage_{i}"] = maybe_scan(
+            cfg, body, x, (params[f"stage_{i}"], cache[f"stage_{i}"]))
+    h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], h, cfg)
+    return logits, new_cache

@@ -1,0 +1,36 @@
+"""PaliGemma-style VLM support (stub SigLIP frontend).
+
+Per the assignment, the modality frontend is a STUB: ``input_specs()``
+provides precomputed patch embeddings (B, n_patches, vision_width) standing
+in for SigLIP-so400m output (n_patches=256 at 224px/patch-14,
+vision_width=1152). The backbone work — linear projection to d_model,
+prefix-LM masking over [patches | prompt], gemma decoder — lives in
+``repro.models.transformer`` (family == "vlm"); this module holds the stub's
+dimension bookkeeping so configs and input_specs agree.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def patch_spec(cfg: ModelConfig, batch: int):
+    """ShapeDtypeStruct for the stub patch-embedding input."""
+    return SDS((batch, cfg.n_patches, cfg.vision_width), cfg.cdtype)
+
+
+def text_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Text tokens occupy the sequence budget left after the patch prefix."""
+    assert seq_len > cfg.n_patches, (seq_len, cfg.n_patches)
+    return seq_len - cfg.n_patches
+
+
+def fake_patches(cfg: ModelConfig, batch: int, key: jax.Array) -> jnp.ndarray:
+    """Deterministic stand-in frontend output for smoke tests/examples."""
+    return 0.02 * jax.random.normal(
+        key, (batch, cfg.n_patches, cfg.vision_width), cfg.cdtype)

@@ -1,0 +1,64 @@
+"""Int8 gradient compression for the cross-pod (DCN) all-reduce.
+
+The pod axis of the production mesh carries exactly one collective: the
+data-parallel gradient reduction. Over DCN that reduction is the slowest
+link, so we compress it: block-wise int8 quantization, all-gather of the
+int8 payload (+fp32 scales) over the pod axis, local dequantize-and-sum.
+
+Wire bytes per element: all-gather int8 = 1 B received per peer vs ring
+all-reduce bf16 ~= 2 B — a 2x wire saving at 2 pods (and int8 vs bf16 stays
+2x at any pod count). Quantization error is bounded by the per-block scale
+(max-abs / 127); tests assert the compressed psum matches the exact psum to
+~1% of the block scale.
+
+Used inside a ``shard_map`` over the ``pod`` axis only (data/model stay on
+the GSPMD auto path) — see ``repro.train.step.train_step_compressed``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 1024
+
+
+def _pad_to(x: jnp.ndarray, mult: int) -> jnp.ndarray:
+    n = x.size
+    pad = (-n) % mult
+    return jnp.pad(x.reshape(-1), (0, pad))
+
+
+def quantize_int8(x: jnp.ndarray, block: int = BLOCK):
+    """Flatten -> (nblocks, block) int8 + fp32 per-block scales."""
+    flat = _pad_to(x.astype(jnp.float32), block).reshape(-1, block)
+    scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0
+    q = jnp.round(flat / jnp.maximum(scale, 1e-30)).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, shape, dtype):
+    flat = q.astype(jnp.float32) * scale
+    n = 1
+    for s in shape:
+        n *= s
+    return flat.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str,
+                    block: int = BLOCK) -> jnp.ndarray:
+    """psum(x) over `axis_name` with int8 on the wire.
+
+    all_gather(int8) + local sum == psum up to quantization error. The fp32
+    scales add 4/block bytes per element (0.4% at block=1024).
+    """
+    q, scale = quantize_int8(x, block)
+    qs = jax.lax.all_gather(q, axis_name)          # (P, nb, block) int8 wire
+    ss = jax.lax.all_gather(scale, axis_name)      # (P, nb, 1) fp32 wire
+    total = jnp.sum(qs.astype(jnp.float32) * ss, axis=0)
+    n = x.size
+    return total.reshape(-1)[:n].reshape(x.shape).astype(x.dtype)
+
+
+def compressed_psum_tree(tree, axis_name: str, block: int = BLOCK):
+    return jax.tree.map(lambda g: compressed_psum(g, axis_name, block), tree)

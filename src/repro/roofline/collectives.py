@@ -1,0 +1,121 @@
+"""Parse collective ops out of post-SPMD compiled HLO text.
+
+``compiled.cost_analysis()`` has no collective accounting, so we regex the
+optimized module (one device's SPMD program): every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+instruction's RESULT shape and replica group size, from which per-device
+operand bytes and modeled wire bytes follow:
+
+    op                  operand_bytes        wire_bytes (ring model)
+    all-reduce          result               2 (G-1)/G * result
+    all-gather          result / G           (G-1)/G * result
+    reduce-scatter      result * G           (G-1)/G * result * G
+    all-to-all          result               (G-1)/G * result
+    collective-permute  result               result
+
+Async pairs (-start/-done) are counted once (on -start). While-loop bodies
+appear once in the module; the dry-run lowers with ``unroll_loops`` so
+structural loops are already explicit (DESIGN.md §Roofline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shape>\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Collective:
+    op: str
+    result_bytes: int
+    group_size: int
+
+    @property
+    def operand_bytes(self) -> int:
+        if self.op == "all-gather":
+            return self.result_bytes // max(self.group_size, 1)
+        if self.op == "reduce-scatter":
+            return self.result_bytes * self.group_size
+        return self.result_bytes
+
+    @property
+    def wire_bytes(self) -> float:
+        g = max(self.group_size, 1)
+        if self.op == "all-reduce":
+            return 2.0 * (g - 1) / g * self.result_bytes
+        if self.op == "all-gather":
+            return (g - 1) / g * self.result_bytes
+        if self.op == "reduce-scatter":
+            return (g - 1) / g * self.result_bytes * g
+        if self.op == "all-to-all":
+            return (g - 1) / g * self.result_bytes
+        return float(self.result_bytes)  # collective-permute
+
+
+def parse_collectives(hlo_text: str) -> list[Collective]:
+    out: list[Collective] = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or m.group("start") == "-done":
+            continue
+        shape_bytes = _shape_bytes(m.group("shape"))
+        g = 1
+        gi = _GROUPS_IOTA_RE.search(line)
+        if gi:
+            g = int(gi.group(2))
+        else:
+            gl = _GROUPS_LIST_RE.search(line)
+            if gl:
+                g = len(gl.group(1).split(","))
+            elif m.group("op") == "collective-permute":
+                g = 2
+        out.append(Collective(m.group("op"), shape_bytes, g))
+    return out
+
+
+def summarize(colls: list[Collective]) -> dict:
+    by_op: dict[str, dict] = defaultdict(
+        lambda: {"count": 0, "operand_bytes": 0, "wire_bytes": 0.0})
+    for c in colls:
+        e = by_op[c.op]
+        e["count"] += 1
+        e["operand_bytes"] += c.operand_bytes
+        e["wire_bytes"] += c.wire_bytes
+    return {
+        "by_op": dict(by_op),
+        "count": len(colls),
+        "operand_bytes": sum(c.operand_bytes for c in colls),
+        "wire_bytes": sum(c.wire_bytes for c in colls),
+    }

@@ -1,0 +1,341 @@
+"""Per-computation cost analysis over post-SPMD compiled HLO text.
+
+Why not ``compiled.cost_analysis()``: XLA's HloCostAnalysis visits a while
+body ONCE, so every scanned structure (layer stacks, q-chunks, CE chunks)
+is undercounted by its trip count — for a 94-layer scanned model that is a
+~94x error in the roofline's compute term. Fully unrolling instead makes
+XLA:CPU codegen take ~12 min/cell (measured), infeasible for 80 cells.
+
+This module reimplements the flat cost model per computation and rolls the
+call graph up with while TRIP COUNTS parsed from loop-condition constants:
+
+    total(comp) = own(comp)
+                + Σ_while  trip * (total(body) + total(cond))
+                + Σ_fusion total(called)          (flops only: the fusion
+                                                   call site already counts
+                                                   its operand/result bytes)
+                + Σ_cond   max over branches
+
+Costs per instruction (mirroring HloCostAnalysis conventions):
+    flops:  dot = 2 * result_elems * contracted_dim_product
+            convolution = 2 * result_elems * window_size (depthwise)
+            elementwise/reduce = result_elems
+    bytes:  result + Σ operands, with gather/dynamic-slice/dus counted at
+            slice size (NOT the full operand — stacked scan params would
+            otherwise overcount by n_layers^2)
+    collectives: result bytes + replica group size -> per-device wire bytes
+            (ring model, see roofline.collectives)
+
+Everything is per-device: the compiled module is one device's SPMD program,
+so replicated (unshardable) compute is honestly charged to every chip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+from repro.roofline.collectives import (Collective, _COLL_RE,
+                                        _GROUPS_IOTA_RE, _GROUPS_LIST_RE,
+                                        _DTYPE_BYTES)
+
+_SHAPE_COMPONENT = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+                    r"((?:\(.*?\))|(?:[a-z0-9]+\[[0-9,]*\][^\s]*))\s+"
+                    r"([\w\-]+)\(")
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(")
+_OPERANDS = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+_OP_NAME = re.compile(r"%([\w\.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_WINDOW = re.compile(r"window=\{size=([0-9x]+)")
+_CALLS = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY = re.compile(r"body=%?([\w\.\-]+)")
+_COND = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_TO_APPLY = re.compile(r"to_apply=%?([\w\.\-]+)")
+_CONSTANT = re.compile(r"constant\((\d+)\)")
+
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "replica-id", "iota",
+             "while", "conditional", "call", "custom-call", "rng",
+             "rng-bit-generator", "opt-barrier", "domain", "infeed",
+             "outfeed", "copy-start", "copy-done"}
+
+_TRANSCENDENTAL = {"exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                   "logistic", "sine", "cosine", "exponential-minus-one",
+                   "log-plus-one", "cbrt", "erf", "atan2"}
+
+
+def _shape_elems_and_bytes(shape_str: str) -> tuple[int, int]:
+    elems = 0
+    nbytes = 0
+    for dt, dims in _SHAPE_COMPONENT.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+# ops whose bytes a TPU pays for even under perfect fusion (data movement
+# or kernel boundaries); standalone elementwise/convert/broadcast/copy are
+# charged only in bytes_raw (CPU-fusion-granularity upper bound)
+_MAJOR_BYTES_OPS = {"dot", "convolution", "gather", "scatter",
+                    "dynamic-slice", "dynamic-update-slice", "concatenate",
+                    "pad", "reduce", "reduce-window", "sort", "fusion",
+                    "cholesky", "triangular-solve", "fft"}
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    bytes: float = 0.0
+    bytes_major: float = 0.0
+    coll_wire: float = 0.0
+    coll_operand: float = 0.0
+    coll_count: float = 0.0
+    coll_by_op: dict = dataclasses.field(default_factory=dict)
+    # edges
+    whiles: list = dataclasses.field(default_factory=list)   # (body, cond, trip)
+    fusions: list = dataclasses.field(default_factory=list)  # [name]
+    branches: list = dataclasses.field(default_factory=list)  # [[names]]
+    max_const: int = 1            # biggest int constant (trip-count probe)
+
+
+def _operand_names(line: str, start: int) -> list[str]:
+    """Names inside the operand parens beginning at `start` (balanced scan —
+    the result shape itself may be a parenthesized tuple)."""
+    depth = 0
+    for i in range(start, len(line)):
+        ch = line[i]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return _OP_NAME.findall(line[start + 1:i])
+    return _OP_NAME.findall(line[start + 1:])
+
+
+def parse_computations(hlo: str) -> dict[str, CompCost]:
+    comps: dict[str, CompCost] = {}
+    cur: Optional[CompCost] = None
+    shapes: dict[str, str] = {}
+    reduce_bodies: set[str] = set()
+
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if not line or line.startswith("//"):
+            continue
+        hdr = (_COMP_HEADER.match(line)
+               if line.endswith("{") and ") -> " in line else None)
+        if hdr:
+            cur = CompCost()
+            comps[hdr.group(1)] = cur
+            shapes = {}
+            continue
+        if cur is None:
+            continue
+
+        # while/conditional first: their tuple result shapes contain
+        # /*index=k*/ comments that defeat the generic instruction regex
+        if " while(" in line:
+            mb, mcond = _BODY.search(line), _COND.search(line)
+            if mb and mcond:
+                cur.whiles.append((mb.group(1), mcond.group(1)))
+            continue
+        if " conditional(" in line:
+            mbr = _BRANCHES.search(line)
+            if mbr:
+                cur.branches.append(_OP_NAME.findall(mbr.group(1)))
+            else:
+                tb = re.search(r"true_computation=%?([\w\.\-]+)", line)
+                fb = re.search(r"false_computation=%?([\w\.\-]+)", line)
+                if tb and fb:
+                    cur.branches.append([tb.group(1), fb.group(1)])
+            continue
+
+        m = _INSTR.match(line)
+        if not m:
+            mc = _CONSTANT.search(line)
+            if mc:
+                cur.max_const = max(cur.max_const, int(mc.group(1)))
+            continue
+        name, shape_str, op = m.group(1), m.group(2), m.group(3)
+        shapes[name] = shape_str
+        elems, nbytes = _shape_elems_and_bytes(shape_str)
+
+        mc = _CONSTANT.search(line)
+        if mc:
+            cur.max_const = max(cur.max_const, int(mc.group(1)))
+        for ta in _TO_APPLY.findall(line):
+            reduce_bodies.add(ta)
+        mcall = _CALLS.search(line)
+        if op == "fusion" and mcall:
+            cur.fusions.append(mcall.group(1))
+            # fall through: bytes counted at call site
+
+        # collectives
+        cm = _COLL_RE.search(line)
+        if cm and cm.group("start") != "-done":
+            g = 1
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                g = int(gi.group(2))
+            else:
+                gl = _GROUPS_LIST_RE.search(line)
+                if gl:
+                    g = len(gl.group(1).split(","))
+                elif cm.group("op") == "collective-permute":
+                    g = 2
+            c = Collective(cm.group("op"), nbytes, g)
+            cur.coll_wire += c.wire_bytes
+            cur.coll_operand += c.operand_bytes
+            cur.coll_count += 1
+            e = cur.coll_by_op.setdefault(c.op, [0, 0.0])
+            e[0] += 1
+            e[1] += c.wire_bytes
+            cur.bytes += 2 * nbytes
+            cur.bytes_major += 2 * nbytes
+            continue
+
+        if op in _SKIP_OPS and op != "fusion":
+            continue
+
+        # ---- bytes ----
+        ops_names = _operand_names(line, m.end() - 1)
+        major = op in _MAJOR_BYTES_OPS
+        if op in ("dynamic-slice", "gather"):
+            b = 2 * nbytes
+        elif op == "dynamic-update-slice":
+            upd = shapes.get(ops_names[1]) if len(ops_names) > 1 else None
+            _, ub = _shape_elems_and_bytes(upd) if upd else (0, nbytes)
+            b = 2 * ub
+        elif op == "scatter":
+            upd = shapes.get(ops_names[-1]) if ops_names else None
+            _, ub = _shape_elems_and_bytes(upd) if upd else (0, nbytes)
+            b = nbytes + 2 * ub
+        else:
+            b = nbytes
+            for on in ops_names:
+                if on in shapes:
+                    b += _shape_elems_and_bytes(shapes[on])[1]
+        cur.bytes += b
+        if major:
+            cur.bytes_major += b
+
+        # ---- flops ----
+        if op == "dot":
+            contract = 1
+            mcon = _CONTRACT.search(line)
+            if mcon and ops_names and ops_names[0] in shapes:
+                lhs_dims = []
+                for dt, dims in _SHAPE_COMPONENT.findall(shapes[ops_names[0]]):
+                    lhs_dims = [int(d) for d in dims.split(",") if d]
+                    break
+                for ci in mcon.group(1).split(","):
+                    if ci and int(ci) < len(lhs_dims):
+                        contract *= lhs_dims[int(ci)]
+            cur.flops += 2.0 * elems * contract
+        elif op == "convolution":
+            win = 1
+            mw = _WINDOW.search(line)
+            if mw:
+                for s in mw.group(1).split("x"):
+                    win *= int(s)
+            cur.flops += 2.0 * elems * win
+        elif op in _TRANSCENDENTAL:
+            cur.transcendentals += elems
+            cur.flops += elems
+        elif op != "fusion":
+            cur.flops += elems          # elementwise/reduce: 1 flop/elem
+
+    for rb in reduce_bodies:
+        comps.pop(rb, None)
+    return comps
+
+
+@dataclasses.dataclass
+class ModuleCosts:
+    flops: float
+    transcendentals: float
+    bytes: float          # CPU-fusion-granularity upper bound
+    bytes_major: float    # fusion-aware (TPU-realistic) HBM traffic
+    coll_wire: float
+    coll_operand: float
+    coll_count: float
+    coll_by_op: dict
+    while_trips: list
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def rollup(hlo: str, entry_hint: str | None = None) -> ModuleCosts:
+    comps = parse_computations(hlo)
+    entry_m = re.search(r"ENTRY\s+%?([\w\.\-]+)", hlo)
+    entry = entry_hint or (entry_m.group(1) if entry_m else None)
+    if entry is None or entry not in comps:
+        entry = max(comps, key=lambda k: comps[k].bytes)
+
+    trips: list = []
+    memo: dict[str, tuple] = {}
+
+    def merge_coll(dst: dict, src: dict, mult: float = 1.0):
+        for k, (cnt, wire) in src.items():
+            e = dst.setdefault(k, [0, 0.0])
+            e[0] += cnt * mult
+            e[1] += wire * mult
+
+    def total(name: str, depth: int = 0) -> tuple:
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None or depth > 12:
+            return (0.0,) * 7 + ({},)
+        f, t, b, bm, w, o, n = (c.flops, c.transcendentals, c.bytes,
+                                c.bytes_major, c.coll_wire, c.coll_operand,
+                                c.coll_count)
+        byop = {k: list(v) for k, v in c.coll_by_op.items()}
+        for fus in c.fusions:
+            sf, st, sb, sbm, sw, so, sn, sby = total(fus, depth + 1)
+            f += sf
+            t += st
+            w += sw
+            o += so
+            n += sn            # bytes intentionally NOT added (fusion = one kernel)
+            merge_coll(byop, sby)
+        for body, cond in c.whiles:
+            trip = max(comps.get(cond, CompCost()).max_const, 1)
+            trips.append({"body": body, "trip": trip})
+            for sub in (body, cond):
+                sf, st, sb, sbm, sw, so, sn, sby = total(sub, depth + 1)
+                f += trip * sf
+                t += trip * st
+                b += trip * sb
+                bm += trip * sbm
+                w += trip * sw
+                o += trip * so
+                n += trip * sn
+                merge_coll(byop, sby, trip)
+        for branch_set in c.branches:
+            if branch_set:
+                subs = [total(bn, depth + 1) for bn in branch_set]
+                best = max(subs, key=lambda s: s[2])
+                f, t, b, bm = (f + best[0], t + best[1], b + best[2],
+                               bm + best[3])
+                w, o, n = w + best[4], o + best[5], n + best[6]
+                merge_coll(byop, best[7])
+        memo[name] = (f, t, b, bm, w, o, n, byop)
+        return memo[name]
+
+    f, t, b, bm, w, o, n, byop = total(entry)
+    return ModuleCosts(flops=f, transcendentals=t, bytes=b, bytes_major=bm,
+                       coll_wire=w, coll_operand=o, coll_count=n,
+                       coll_by_op=byop, while_trips=trips)

@@ -1,0 +1,6 @@
+"""TPU v5e hardware constants (the TARGET machine of this framework)."""
+
+PEAK_FLOPS_BF16 = 197e12       # per chip, bf16
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_LINK_BW = 50e9             # bytes/s per ICI link (~4 links/chip)
+HBM_PER_CHIP = 16 * 1024**3    # 16 GiB

@@ -1,0 +1,161 @@
+"""Serving engine: prefill/decode steps + slot-based continuous batching.
+
+``make_prefill_step`` / ``make_serve_step`` build the jit-able functions the
+dry-run lowers for the ``prefill_32k`` / ``decode_32k`` / ``long_500k``
+cells. ``SlotEngine`` is the host-side batcher: a fixed pool of B slots,
+each holding one request's position; finished slots are refilled from the
+queue without recompiling (shapes never change — TPU-friendly continuous
+batching).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.models.common import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int) -> Callable:
+    """(params, batch) -> (last-position logits, cache tree)."""
+
+    def prefill_step(params, batch: dict):
+        return api.prefill(params, cfg, batch, max_len)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """One-token decode for the whole slot batch.
+
+    tokens: (B, 1) i32; pos: () or (B,) i32; cache in/out (donated under
+    jit). Logits out: (B, 1, V).
+    """
+
+    def serve_step(params, tokens, pos, cache):
+        return api.decode(params, cfg, tokens, pos, cache)
+
+    return serve_step
+
+
+def sample_tokens(logits: jnp.ndarray, key: jax.Array,
+                  temperature: float = 0.0) -> jnp.ndarray:
+    """(B, 1, V) -> (B, 1) greedy (t=0) or temperature sampling."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits.astype(jnp.float32) / temperature, axis=-1).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (P,) int32
+    max_new: int = 32
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class SlotEngine:
+    """Fixed-B continuous batcher over the jitted prefill/decode steps.
+
+    Per-slot prefill writes the prompt's KV into the slot's rows of the
+    shared cache; all active slots then decode in lockstep. The batch
+    shape is constant, so there is exactly one compiled decode executable
+    regardless of arrival pattern — the TPU analogue of a FIFO worker pool
+    (requests queue; a free slot takes the head of the queue).
+    """
+
+    def __init__(self, params, cfg: ModelConfig, n_slots: int, max_len: int,
+                 temperature: float = 0.0, eos_id: int = 2, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.B = n_slots
+        self.max_len = max_len
+        self.temperature = temperature
+        self.eos_id = eos_id
+        self.key = jax.random.key(seed)
+
+        self.cache = api.init_cache(cfg, n_slots, max_len)
+        # cache leaves are layer-stacked: locate each leaf's batch axis so
+        # per-slot copies index the right dimension
+        spec_tree = api.cache_specs(cfg, n_slots, max_len)
+        is_leaf = lambda x: (isinstance(x, tuple) and len(x) == 2
+                             and hasattr(x[0], "shape"))
+        self._batch_axes = [a.index("batch") for a in jax.tree.leaves(
+            jax.tree.map(lambda t: t[1], spec_tree, is_leaf=is_leaf),
+            is_leaf=lambda x: isinstance(x, tuple))]
+        self.pos = np.zeros((n_slots,), np.int32)       # next write position
+        self.active: list[Request | None] = [None] * n_slots
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+
+        # jit once; batch=1 prefill per admitted request
+        self._prefill1 = jax.jit(make_prefill_step(cfg, max_len))
+        self._decode = jax.jit(make_serve_step(cfg), donate_argnums=(3,))
+        self._pending_tok = np.zeros((n_slots, 1), np.int32)
+
+    # ------------------------------------------------------------- admit ----
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.B):
+            if self.active[s] is None and self.queue:
+                req = self.queue.pop(0)
+                toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+                logits, cache1 = self._prefill1(self.params, {"tokens": toks})
+                # copy the single-request cache into slot s (per-leaf batch axis)
+                big_leaves, treedef = jax.tree.flatten(self.cache)
+                one_leaves = jax.tree.leaves(cache1)
+                out = []
+                for big, one, bi in zip(big_leaves, one_leaves,
+                                        self._batch_axes):
+                    idx = (slice(None),) * bi
+                    out.append(big.at[idx + (s,)].set(one[idx + (0,)]))
+                self.cache = jax.tree.unflatten(treedef, out)
+                self.key, k = jax.random.split(self.key)
+                tok = sample_tokens(logits, k, self.temperature)
+                req.out.append(int(tok[0, 0]))
+                self._pending_tok[s] = np.asarray(tok[0])
+                self.pos[s] = len(req.prompt)
+                self.active[s] = req
+
+    # -------------------------------------------------------------- step ----
+    def step(self) -> int:
+        """One engine tick: admit, decode all active slots, retire finished."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return 0
+        tokens = jnp.asarray(self._pending_tok)
+        pos = jnp.asarray(self.pos)
+        logits, self.cache = self._decode(self.params, tokens, pos, self.cache)
+        self.key, k = jax.random.split(self.key)
+        nxt = np.asarray(sample_tokens(logits, k, self.temperature))
+        n_active = 0
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            n_active += 1
+            tok = int(nxt[s, 0])
+            req.out.append(tok)
+            self.pos[s] += 1
+            self._pending_tok[s] = tok
+            if (tok == self.eos_id or len(req.out) >= req.max_new
+                    or self.pos[s] >= self.max_len - 1):
+                req.done = True
+                self.finished.append(req)
+                self.active[s] = None
+        return n_active
+
+    def run(self, max_ticks: int = 10_000) -> list[Request]:
+        ticks = 0
+        while (self.queue or any(self.active)) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.finished

@@ -1,0 +1,287 @@
+"""GSCPM-guided LM decoding — the paper's technique as a serving feature.
+
+A search job over token continuations is exactly the paper's "logical task
+of fungible iterations" (DESIGN.md §4): ``n_playouts`` UCT iterations are
+split into ``n_tasks`` grains of ``m`` iterations, scheduled onto
+``n_workers`` vmapped lanes against ONE shared token tree, by the same
+``repro.core.scheduler`` disciplines the Hex engine uses.
+
+Mapping of MCTS steps onto the LM:
+
+- *state* of a node at depth k = prompt ⊕ k tree tokens; the root holds the
+  prefilled prompt KV cache (computed once, broadcast to the worker lanes).
+- *selection*: UCT descent over up-to-``branch`` children per node
+  (single-agent: a node's value is its mean rollout score).
+- *expansion*: an untried token among the leaf's top-``branch`` logits;
+  batch-deduped via the same prefix-sum allocator as Hex (token ids are
+  legal `move`s since expand_batch orders (leaf, move) lexicographically).
+- *playout*: ``rollout_len`` sampled continuation tokens; the score is
+  exp(mean logprob) ∈ (0,1] — the model's own confidence in the line
+  (a likelihood-based stand-in for the game result Δ).
+- *backup*: scatter-add of the score along the path (atomics → .at[].add).
+
+Every playout replays its path through the decode step (positions after the
+prompt are rewritten each iteration, so one (W, S_max) cache serves all
+iterations without copying).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scheduler as sched
+from repro.core import uct as uct_mod
+from repro.core.gscpm import expand_batch
+from repro.core.tree import NO_NODE, Tree, init_tree
+from repro.models import api
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MCTSDecodeConfig:
+    n_playouts: int = 128
+    n_tasks: int = 16            # the grain dial: m = n_playouts / n_tasks
+    n_workers: int = 8           # vmapped lanes through the LM
+    cp: float = 1.0
+    branch: int = 8              # children per node = top-k tokens
+    max_depth: int = 6           # tree horizon in tokens
+    rollout_len: int = 8
+    temperature: float = 1.0
+    select_noise: float = 1e-3
+    tree_cap: int = 2048
+    scheduler: str = "fifo"
+
+    @property
+    def grain(self) -> int:
+        return max(1, self.n_playouts // max(1, self.n_tasks))
+
+
+# ------------------------------------------------------------- selection ----
+def select_token_path(tree: Tree, cfg: MCTSDecodeConfig, noise_key: jax.Array):
+    """UCT descent to a not-fully-expanded node (single-agent values)."""
+    cap = tree.cap
+    C = tree.max_children
+    max_path = cfg.max_depth + 2
+    path0 = jnp.full((max_path,), cap, dtype=jnp.int32).at[0].set(0)
+
+    def cond(st):
+        node, depth, path, done = st
+        return ~done
+
+    def body(st):
+        node, depth, path, _ = st
+        n_kids = tree.n_children[node]
+        fully = (n_kids >= cfg.branch) & (depth < cfg.max_depth)
+        slots = tree.children[node]
+        valid = jnp.arange(C, dtype=jnp.int32) < n_kids
+        safe = jnp.where(valid, slots, cap)
+        scores = uct_mod.uct_scores(
+            tree.wins[safe], tree.visits[safe], tree.vloss[safe],
+            tree.visits[node] + tree.vloss[node], cfg.cp, valid)
+        noise = cfg.select_noise * jax.random.uniform(
+            jax.random.fold_in(noise_key, depth), (C,))
+        child = safe[uct_mod.select_child(scores, noise)]
+        nxt = (child, depth + 1, path.at[depth + 1].set(child), False)
+        stay = (node, depth, path, True)
+        return jax.tree.map(lambda a, b: jnp.where(fully, a, b), nxt, stay)
+
+    node, depth, path, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), jnp.int32(0), path0, False))
+    return path, depth, node
+
+
+def path_tokens(tree: Tree, path: jnp.ndarray, max_depth: int) -> jnp.ndarray:
+    """Tokens along the path (token of path[t+1]), 0-padded."""
+    toks = tree.move[path[1:max_depth + 1]]
+    return jnp.maximum(toks, 0).astype(jnp.int32)
+
+
+def propose_token(tree: Tree, leaf: jnp.ndarray, leaf_logits: jnp.ndarray,
+                  cfg: MCTSDecodeConfig, depth: jnp.ndarray,
+                  key: jax.Array) -> jnp.ndarray:
+    """Random untried token among the leaf's top-`branch` logits (-1: none)."""
+    C = tree.max_children
+    cap = tree.cap
+    _, top_tok = jax.lax.top_k(leaf_logits, cfg.branch)   # (branch,)
+    slots = tree.children[leaf]
+    valid = jnp.arange(C, dtype=jnp.int32) < tree.n_children[leaf]
+    tried = jnp.where(valid, tree.move[jnp.where(valid, slots, cap)], -1)
+    is_tried = (top_tok[:, None] == tried[None, :]).any(axis=1)  # (branch,)
+    can = ~is_tried & (depth < cfg.max_depth)
+    g = jax.random.gumbel(key, (cfg.branch,))
+    pick = jnp.argmax(jnp.where(can, g, -jnp.inf))
+    return jnp.where(can.any(), top_tok[pick], NO_NODE).astype(jnp.int32)
+
+
+# ----------------------------------------------------------------- backup ----
+def backup_values(tree: Tree, paths: jnp.ndarray, values: jnp.ndarray,
+                  weights: jnp.ndarray) -> Tree:
+    """Single-agent scatter-add backup: every node on the path gains value."""
+    W, D = paths.shape
+    flat = paths.reshape(-1)
+    w = jnp.repeat(weights, D) * (flat != tree.cap)
+    visits = tree.visits.at[flat].add(w).at[tree.cap].set(0.0)
+    wins = tree.wins.at[flat].add(
+        w * jnp.repeat(values, D)).at[tree.cap].set(0.0)
+    return tree._replace(visits=visits, wins=wins)
+
+
+# ---------------------------------------------------------- one iteration ----
+def _iteration(tree: Tree, params, mcfg: ModelConfig, cfg: MCTSDecodeConfig,
+               cache, root_logits: jnp.ndarray, prompt_len: int,
+               iter_keys: jnp.ndarray, active: jnp.ndarray):
+    """One batched GSCPM iteration of width W against the shared token tree."""
+    W = cfg.n_workers
+    V = root_logits.shape[-1]
+
+    sel = jax.vmap(lambda k: select_token_path(
+        tree, cfg, jax.random.fold_in(k, 0)))(iter_keys)
+    paths, depths, leaves = sel                                # (W, D), (W,), (W,)
+    toks = jax.vmap(lambda p: path_tokens(tree, p, cfg.max_depth))(paths)
+
+    # --- replay the paths through the decode step (lockstep positions) ----
+    def replay_step(t, carry):
+        cache, leaf_logits = carry
+        tok_t = toks[:, t][:, None]                            # (W,1)
+        logits, cache = api.decode(params, mcfg, tok_t,
+                                   jnp.int32(prompt_len) + t, cache)
+        leaf_logits = jnp.where((depths == t + 1)[:, None],
+                                logits[:, 0, :], leaf_logits)
+        return cache, leaf_logits
+
+    leaf_logits0 = jnp.broadcast_to(root_logits, (W, V))
+    cache, leaf_logits = jax.lax.fori_loop(
+        0, cfg.max_depth, replay_step, (cache, leaf_logits0))
+
+    # --- expansion (dedup batch insert, same allocator as Hex) ------------
+    k_prop = jax.vmap(lambda k: jax.random.fold_in(k, 1))(iter_keys)
+    moves = jax.vmap(
+        lambda l, ll, d, k: propose_token(tree, l, ll, cfg, d, k)
+    )(leaves, leaf_logits, depths, k_prop)
+    tree, new_ids = expand_batch(tree, leaves, moves, active)
+    expanded = new_ids < tree.cap
+    paths = jnp.where(
+        jnp.arange(paths.shape[1])[None, :] == (depths + 1)[:, None],
+        jnp.where(expanded[:, None], new_ids[:, None], tree.cap), paths)
+
+    # --- rollout: expanded token first, then sampled continuation --------
+    start_pos = jnp.int32(prompt_len) + cfg.max_depth  # parked replay ends here
+
+    def rollout(cache):
+        tok0 = jnp.where(expanded, jnp.maximum(moves, 0),
+                         jnp.argmax(leaf_logits, -1).astype(jnp.int32))
+
+        def body(t, carry):
+            cache, tok, logp_sum = carry
+            logits, cache = api.decode(params, mcfg, tok[:, None],
+                                       start_pos + t, cache)
+            logits = logits[:, 0, :].astype(jnp.float32)
+            logits_t = logits / max(cfg.temperature, 1e-6)
+            keys = jax.vmap(
+                lambda k: jax.random.fold_in(jax.random.fold_in(k, 2), t)
+            )(iter_keys)
+            nxt = jax.vmap(jax.random.categorical)(keys, logits_t)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            lp = jnp.take_along_axis(logp, nxt[:, None], axis=1)[:, 0]
+            return cache, nxt.astype(jnp.int32), logp_sum + lp
+
+        cache, _, logp_sum = jax.lax.fori_loop(
+            0, cfg.rollout_len, body,
+            (cache, tok0, jnp.zeros((W,), jnp.float32)))
+        return cache, logp_sum
+
+    cache, logp_sum = rollout(cache)
+    values = jnp.exp(logp_sum / cfg.rollout_len)               # (0,1]
+    tree = backup_values(tree, paths, values, active.astype(jnp.float32))
+    return tree, cache
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mcfg", "cfg", "prompt_len"),
+                   donate_argnums=(0, 4))
+def run_chunk(tree: Tree, params, mcfg: ModelConfig, cfg: MCTSDecodeConfig,
+              cache, root_logits, prompt_len: int, task_keys, active,
+              m) -> tuple[Tree, Any]:
+    """m sync iterations — one task grain per lane (jitted once per config)."""
+
+    def body(i, carry):
+        tree, cache = carry
+        iter_keys = jax.vmap(lambda tk: jax.random.fold_in(tk, i))(task_keys)
+        return _iteration(tree, params, mcfg, cfg, cache, root_logits,
+                          prompt_len, iter_keys, active)
+
+    return jax.lax.fori_loop(0, m, body, (tree, cache))
+
+
+# ------------------------------------------------------------------ driver ----
+def mcts_decode_search(params, mcfg: ModelConfig, prompt: jnp.ndarray,
+                       cfg: MCTSDecodeConfig, key: jax.Array,
+                       batch_extras: dict | None = None
+                       ) -> tuple[Tree, dict[str, Any]]:
+    """One GSCPM search for the best next token after `prompt` (1D i32)."""
+    prompt_len = int(prompt.shape[0])
+    max_len = prompt_len + cfg.max_depth + cfg.rollout_len + 1
+    # prefill with the prompt tiled across the worker lanes: every lane gets
+    # its own copy of the prompt KV (cache leaves are layer-stacked, so this
+    # is simpler and shape-agnostic vs broadcasting a batch axis mid-tree)
+    W = cfg.n_workers
+    tiled = jnp.tile(prompt[None, :], (W, 1))
+    extras = {k: jnp.tile(v, (W,) + (1,) * (v.ndim - 1))
+              for k, v in (batch_extras or {}).items()}
+    root_logits, cache = api.prefill(params, mcfg,
+                                     {"tokens": tiled, **extras}, max_len)
+    root_logits = root_logits[0, 0].astype(jnp.float32)
+
+    tree = init_tree(cfg.tree_cap, cfg.branch, 1)
+    schedule = sched.make_schedule(
+        cfg.n_playouts, cfg.n_tasks, cfg.n_workers, cfg.scheduler)
+
+    t0 = time.perf_counter()
+    playouts = 0
+    for rnd in schedule:
+        task_keys = jax.vmap(lambda t: jax.random.fold_in(key, t))(
+            jnp.asarray(rnd.task_ids, dtype=jnp.int32))
+        active = jnp.asarray(rnd.active)
+        tree, cache = run_chunk(tree, params, mcfg, cfg, cache, root_logits,
+                                prompt_len, task_keys, active,
+                                jnp.asarray(rnd.m, jnp.int32))
+        playouts += int(rnd.active.sum()) * rnd.m
+    jax.block_until_ready(tree.visits)
+    dt = time.perf_counter() - t0
+
+    slots = tree.children[0]
+    valid = jnp.arange(tree.max_children) < tree.n_children[0]
+    safe = jnp.where(valid, slots, tree.cap)
+    counts = jnp.where(valid, tree.visits[safe], -jnp.inf)
+    best = tree.move[safe[jnp.argmax(counts)]]
+    stats = {
+        "time_s": dt,
+        "playouts": playouts,
+        "playouts_per_s": playouts / max(dt, 1e-9),
+        "tree_nodes": int(tree.n_nodes),
+        "best_token": int(best),
+        "grain": cfg.grain,
+        "root_children": int(tree.n_children[0]),
+    }
+    return tree, stats
+
+
+def mcts_generate(params, mcfg: ModelConfig, prompt: jnp.ndarray,
+                  n_tokens: int, cfg: MCTSDecodeConfig, key: jax.Array,
+                  batch_extras: dict | None = None) -> tuple[jnp.ndarray, list]:
+    """Emit n_tokens, one GSCPM search per token (search-then-commit)."""
+    toks = jnp.asarray(prompt, jnp.int32)
+    all_stats = []
+    for i in range(n_tokens):
+        _, stats = mcts_decode_search(
+            params, mcfg, toks, cfg, jax.random.fold_in(key, i), batch_extras)
+        toks = jnp.concatenate(
+            [toks, jnp.asarray([stats["best_token"]], jnp.int32)])
+        all_stats.append(stats)
+    return toks, all_stats

@@ -1,0 +1,129 @@
+"""Fault-tolerant training loop: checkpoint/restart, skip-on-spike, watchdog.
+
+Designed for the 1000+-node posture (DESIGN.md §6):
+
+- **restart**: on startup the loop restores the newest valid checkpoint
+  (params + optimizer + data-iterator step) and continues exactly where the
+  failed run left off; a crash can lose at most `ckpt_every` steps.
+- **async checkpointing**: device->host snapshot is synchronous (cheap),
+  disk I/O overlaps the next steps.
+- **bad-step skip**: non-finite grad norms leave params/moments untouched
+  (see ``repro.optim.adamw``) — a poisoned batch or a flaky host cannot
+  corrupt the run.
+- **straggler watchdog**: per-step wall times feed a rolling median; steps
+  slower than ``watchdog_factor`` x median are surfaced to the log (on real
+  pods this is where you page / trigger hot-spare swap; on CPU it just
+  reports). This is the monitoring half of straggler mitigation; the
+  scheduling half is the paper's own grain-size story (fine-grained
+  microbatches keep lanes busy).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint import store
+from repro.data.pipeline import DataConfig, Prefetcher, make_batch_fn
+from repro.models.common import ModelConfig
+from repro.optim import adamw
+from repro.train import step as step_mod
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    steps: int = 100
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    ckpt_keep: int = 3
+    log_every: int = 10
+    n_microbatches: int = 1
+    watchdog_factor: float = 3.0
+    seed: int = 0
+
+
+def train(cfg: ModelConfig, opt_cfg: adamw.OptConfig, data_cfg: DataConfig,
+          loop: LoopConfig, mesh=None,
+          log: Callable[[str], None] = print) -> dict[str, Any]:
+    """Run (or resume) a training job; returns final metrics + history."""
+    step_fn = step_mod.make_train_step(cfg, opt_cfg, loop.n_microbatches)
+    batch_fn = make_batch_fn(data_cfg, cfg)
+
+    start_step = 0
+    state = None
+    saver = None
+    if loop.ckpt_dir:
+        saver = store.AsyncSaver(loop.ckpt_dir, keep=loop.ckpt_keep)
+        last = store.latest_step(loop.ckpt_dir)
+        if last is not None:
+            template = step_mod.abstract_state(cfg)
+            shardings = (step_mod.state_shardings(mesh, cfg)
+                         if mesh is not None else None)
+            state, extra = store.restore(loop.ckpt_dir, last, template,
+                                         shardings)
+            start_step = int(extra.get("data_step", last))
+            log(f"[resume] restored step {last}, data_step {start_step}")
+
+    if state is None:
+        state = step_mod.make_state(cfg, jax.random.key(loop.seed))
+        if mesh is not None:
+            state = jax.device_put(state, step_mod.state_shardings(mesh, cfg))
+
+    if mesh is not None:
+        example = batch_fn(start_step)
+        jstep = step_mod.jit_train_step(step_fn, mesh, cfg, example)
+    else:
+        jstep = jax.jit(step_fn, donate_argnums=(0,))
+
+    data = Prefetcher(batch_fn, start_step=start_step)
+    history: list[dict] = []
+    times: list[float] = []
+    stragglers = 0
+    next_step = start_step
+    try:
+        for step, batch in data:
+            if step >= loop.steps:
+                break
+            next_step = step + 1
+            t0 = time.perf_counter()
+            state, metrics = jstep(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            times.append(dt)
+            if len(times) >= 8:
+                med = statistics.median(times[-64:])
+                if dt > loop.watchdog_factor * med:
+                    stragglers += 1
+                    log(f"[watchdog] step {step}: {dt:.3f}s "
+                        f">{loop.watchdog_factor:.1f}x median {med:.3f}s "
+                        f"(straggler suspected)")
+            m = {k: float(np.asarray(v)) for k, v in metrics.items()}
+            m["step"] = step
+            m["time_s"] = dt
+            history.append(m)
+            if m["skipped"]:
+                log(f"[skip] step {step}: non-finite grads, update skipped")
+            if step % loop.log_every == 0:
+                log(f"step {step:5d} loss {m['loss']:.4f} "
+                    f"gnorm {m['grad_norm']:.3f} lr {m['lr']:.2e} {dt:.3f}s")
+            if saver and (step + 1) % loop.ckpt_every == 0:
+                saver.save(step + 1, state,
+                           extra={"data_step": next_step})
+        if saver:
+            saver.save(next_step, state, extra={"data_step": next_step})
+            saver.wait()
+    finally:
+        data.close()
+
+    return {
+        "final_loss": history[-1]["loss"] if history else float("nan"),
+        "history": history,
+        "stragglers": stragglers,
+        "steps_per_s": (len(times) / sum(times)) if times else 0.0,
+        "state": state,
+    }

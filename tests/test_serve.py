@@ -1,0 +1,104 @@
+"""Serving: slot engine semantics + GSCPM token-tree decoding."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import api
+from repro.serve.engine import Request, SlotEngine
+from repro.serve.mcts_decode import (MCTSDecodeConfig, backup_values,
+                                     mcts_decode_search)
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = configs.reduced_config("smollm-135m").replace(n_layers=2)
+    params = api.init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def test_slot_engine_completes(small_lm):
+    cfg, params = small_lm
+    eng = SlotEngine(params, cfg, n_slots=2, max_len=48)
+    rng = np.random.default_rng(0)
+    for rid in range(5):
+        eng.submit(Request(rid=rid,
+                           prompt=rng.integers(1, cfg.vocab, size=(6,),
+                                               dtype=np.int64).astype(np.int32),
+                           max_new=5))
+    done = eng.run()
+    assert len(done) == 5
+    assert all(len(r.out) == 5 or r.out[-1] == eng.eos_id for r in done)
+
+
+def test_slot_engine_greedy_matches_direct(small_lm):
+    """One request through the engine == direct prefill+decode loop."""
+    cfg, params = small_lm
+    prompt = np.arange(1, 9, dtype=np.int32)
+    eng = SlotEngine(params, cfg, n_slots=1, max_len=32, temperature=0.0,
+                     eos_id=-1)
+    eng.submit(Request(rid=0, prompt=prompt, max_new=4))
+    out = eng.run()[0].out
+
+    logits, cache = api.prefill(params, cfg, {"tokens": jnp.asarray(prompt)[None]},
+                                32)
+    toks = [int(jnp.argmax(logits[0, 0]))]
+    pos = len(prompt)
+    for i in range(3):
+        logits, cache = api.decode(
+            params, cfg, jnp.asarray([[toks[-1]]], jnp.int32),
+            jnp.asarray([pos + i], jnp.int32), cache)
+        toks.append(int(jnp.argmax(logits[0, 0])))
+    assert out == toks
+
+
+def test_mcts_decode_tree_growth(small_lm):
+    cfg, params = small_lm
+    prompt = jnp.arange(1, 7, dtype=jnp.int32)
+    dcfg = MCTSDecodeConfig(n_playouts=24, n_tasks=6, n_workers=4, branch=4,
+                            max_depth=3, rollout_len=3, tree_cap=128)
+    tree, stats = mcts_decode_search(params, cfg, prompt, dcfg,
+                                     jax.random.key(2))
+    assert stats["playouts"] == 24
+    assert 1 < stats["tree_nodes"] <= 128
+    assert stats["root_children"] <= dcfg.branch
+    # best token must be one of the root's children
+    kids = np.asarray(tree.children[0][: int(tree.n_children[0])])
+    moves = np.asarray(tree.move)[kids]
+    assert stats["best_token"] in moves.tolist()
+    # visits consistent: root visits == playouts
+    assert float(tree.visits[0]) == pytest.approx(24.0)
+
+
+def test_mcts_decode_grain_invariance(small_lm):
+    """Same playout budget at different grains -> same amount of search."""
+    cfg, params = small_lm
+    prompt = jnp.arange(1, 7, dtype=jnp.int32)
+    sizes = []
+    for n_tasks in (4, 12):
+        dcfg = MCTSDecodeConfig(n_playouts=24, n_tasks=n_tasks, n_workers=4,
+                                branch=4, max_depth=3, rollout_len=3,
+                                tree_cap=128)
+        _, stats = mcts_decode_search(params, cfg, prompt, dcfg,
+                                      jax.random.key(3))
+        assert stats["playouts"] == 24
+        sizes.append(stats["tree_nodes"])
+    assert all(s > 1 for s in sizes)
+
+
+def test_backup_values():
+    from repro.core.tree import init_tree
+    tree = init_tree(8, 4, 1)
+    paths = jnp.asarray([[0, 1, 8, 8], [0, 8, 8, 8]], jnp.int32)
+    vals = jnp.asarray([0.5, 1.0])
+    w = jnp.asarray([1.0, 1.0])
+    t2 = backup_values(tree, paths, vals, w)
+    assert float(t2.visits[0]) == 2.0
+    assert float(t2.wins[0]) == pytest.approx(1.5)
+    assert float(t2.visits[1]) == 1.0
+    assert float(t2.wins[1]) == pytest.approx(0.5)
+    assert float(t2.visits[tree.cap]) == 0.0  # pad row untouched

@@ -1,0 +1,64 @@
+"""Sharding rules: logical axis mapping, divisibility, shape-specific rules."""
+
+from __future__ import annotations
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.shapes import SHAPES
+from repro.launch.inputs import rules_for_shape
+from repro.sharding import rules as shr
+
+
+def _mesh2(d=2, m=2):
+    n = d * m
+    if len(jax.devices()) < n:
+        pytest.skip("needs >= 4 devices")
+    return jax.make_mesh((d, m), ("data", "model"))
+
+
+def test_logical_to_spec_basic():
+    spec = shr.logical_to_spec(("batch", None, "heads", None))
+    assert spec == P(("pod", "data"), None, "model", None)
+
+
+def test_no_axis_reuse_within_spec():
+    # embed->data and batch->(pod,data): data must not be used twice
+    spec = shr.logical_to_spec(("batch", "embed"))
+    flat = []
+    for e in spec:
+        if isinstance(e, tuple):
+            flat += list(e)
+        elif e is not None:
+            flat.append(e)
+    assert len(flat) == len(set(flat))
+
+
+def test_divisible_spec_drops_nondividing():
+    mesh = jax.make_mesh((1,), ("model",))
+    spec = shr._divisible_spec(P("model"), (7,), mesh)   # 7 % 1 == 0 ok
+    assert spec == P("model")
+    mesh2 = None
+    try:
+        mesh2 = _mesh2()
+    except Exception:
+        pytest.skip("no 4 devices")
+    s = shr._divisible_spec(P("model", "data"), (3, 4), mesh2)
+    assert s == P(None, "data")                           # 3 % 2 != 0 dropped
+
+
+def test_rules_for_shape_decode():
+    r = rules_for_shape(SHAPES["decode_32k"])
+    assert r["kv_len"] == "model"
+    r1 = rules_for_shape(SHAPES["long_500k"])
+    assert r1["batch"] is None
+    assert r1["kv_len"] == ("data", "model")
+    rt = rules_for_shape(SHAPES["train_4k"])
+    assert rt["kv_len"] == shr.DEFAULT_RULES["kv_len"]
+
+
+def test_shard_noop_outside_mesh():
+    import jax.numpy as jnp
+    x = jnp.zeros((4, 4))
+    assert shr.shard(x, ("batch", None)) is x
