@@ -23,7 +23,7 @@ def main():
 
     from benchmarks import (ablate_vloss, fig5_cilkview, fig7_speedup,
                             fig9_mapping, kernels_micro, roofline_table,
-                            table2_sequential)
+                            root_parallel, table2_sequential)
     from benchmarks.common import save_result
 
     n_po = 8192 if args.full else 1024
@@ -38,6 +38,7 @@ def main():
         "kernels_micro": lambda: kernels_micro.run(),
         "ablate_vloss": lambda: ablate_vloss.run(n_playouts=n_po),
         "roofline_table": lambda: roofline_table.run(),
+        "root_parallel": lambda: root_parallel.run(n_playouts=n_po),
     }
     if args.only:
         keep = {k.strip() for k in args.only.split(",")}
@@ -76,6 +77,9 @@ def _summ(name: str, res: dict) -> dict:
     if name == "fig7_speedup":
         return {s: {t: round(p["speedup"], 2) for t, p in pts.items()}
                 for s, pts in res["curves"].items()}
+    if name == "root_parallel":
+        return {f"E={e}": round(p["aggregate_speedup"], 2)
+                for e, p in res["ensemble"].items()}
     if name == "fig9_mapping":
         return {t: {k: round(v, 2) for k, v in o.items()}
                 for t, o in res["overlay"].items()}

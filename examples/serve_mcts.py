@@ -5,6 +5,9 @@ engine (one compiled decode step, slots refill from the queue).
 Part 2 decodes with Grain-Size Controlled MCTS — the paper's technique as
 a first-class serving feature — and shows the grain-size dial: the same
 playout budget at different nTasks.
+Part 3 serves MULTIPLE search-guided requests at once: the MCTS slot
+engine gives every request its own token tree and advances all of them
+through one shared jitted step (root parallelism, DESIGN.md §3).
 
     PYTHONPATH=src python examples/serve_mcts.py
 """
@@ -50,6 +53,26 @@ def main():
               f"{st['playouts']} playouts -> tree {st['tree_nodes']:4d} "
               f"nodes, best token {st['best_token']} "
               f"({st['playouts_per_s']:.0f} playouts/s)")
+
+    # ---- part 3: multi-user MCTS serving (one tree per request) -------
+    from repro.serve.engine import MCTSSlotEngine
+
+    dcfg = MCTSDecodeConfig(n_playouts=32, n_tasks=8, n_workers=4,
+                            branch=4, max_depth=3, rollout_len=4,
+                            tree_cap=256)
+    meng = MCTSSlotEngine(params, cfg, dcfg, n_slots=3, max_prompt_len=32)
+    for rid in range(5):
+        plen = int(rng.integers(4, 10))
+        meng.submit(Request(rid=rid, prompt=rng.integers(
+            1, cfg.vocab, size=(plen,)).astype(np.int32), max_new=4))
+    t0 = time.perf_counter()
+    done = meng.run()
+    dt = time.perf_counter() - t0
+    tok = sum(len(r.out) for r in done)
+    searches = len(meng.search_stats)
+    print(f"MCTS slot engine: {len(done)} requests, {tok} searched tokens "
+          f"in {searches} lockstep ticks, {tok/dt:.1f} tok/s "
+          f"(3 slots, 3 trees, one jitted search step)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,60 @@
+"""JAX version-compatibility shims.
+
+The codebase targets current jax (top-level ``jax.shard_map``,
+``jax.sharding.AxisType``, dict-valued ``Compiled.cost_analysis``), but must
+also run on the 0.4.x line some containers pin (no AxisType, shard_map still
+under ``jax.experimental``, list-valued cost_analysis). Every
+version-sensitive call site goes through this module so the difference lives
+in exactly one place.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_auto_mesh(shape, axis_names, devices=None):
+    """``jax.make_mesh`` with Auto axis types where supported.
+
+    On older jax the ``axis_types`` kwarg (and ``AxisType``) don't exist;
+    meshes are implicitly auto there, so omitting it is equivalent.
+    """
+    kwargs = {} if devices is None else {"devices": devices}
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(shape, axis_names,
+                             axis_types=(AxisType.Auto,) * len(axis_names),
+                             **kwargs)
+    except (ImportError, TypeError):
+        return jax.make_mesh(shape, axis_names, **kwargs)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check: bool = False):
+    """Top-level ``jax.shard_map`` or the ``jax.experimental`` fallback.
+
+    ``axis_names`` = the mesh axes the body is manual over (None: all).
+    ``check`` maps onto check_vma (new) / check_rep (old).
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        try:
+            return jax.shard_map(f, check_vma=check, **kwargs)
+        except TypeError:                       # older check_rep spelling
+            return jax.shard_map(f, check_rep=check, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    auto = (frozenset(mesh.axis_names) - frozenset(axis_names)
+            if axis_names is not None else frozenset())
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check, auto=auto)
+
+
+def cost_analysis_dict(compiled_or_lowered) -> dict:
+    """``.cost_analysis()`` as a flat dict (older jax returns a 1-list)."""
+    cost = compiled_or_lowered.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)

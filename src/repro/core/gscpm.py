@@ -229,15 +229,21 @@ def sync_iteration(tree: Tree, root_board: jnp.ndarray, cfg: GSCPMConfig,
     keys_r = iter_keys.reshape(R, Wr, *iter_keys.shape[1:])
     active_r = active.reshape(R, Wr)
 
+    # virtual loss only influences the NEXT selection round of this
+    # iteration; with a single round (R == 1) the add+reset pair is dead
+    # weight — skipping it is bit-identical (no RNG is consumed)
     def round_body(tr, inp):
         keys_g, act_g = inp
         out = select_group(tr, keys_g)
         paths = out[0]
-        tr = add_vloss(tr, paths, act_g.astype(jnp.float32), cfg.virtual_loss)
+        if R > 1:
+            tr = add_vloss(tr, paths, act_g.astype(jnp.float32),
+                           cfg.virtual_loss)
         return tr, out
 
     tree, outs = jax.lax.scan(round_body, tree, (keys_r, active_r))
-    tree = reset_vloss(tree)
+    if R > 1:
+        tree = reset_vloss(tree)
 
     paths = outs[0].reshape(W, -1)
     depths = outs[1].reshape(W)
@@ -280,6 +286,13 @@ def run_chunk(tree: Tree, root_board: jnp.ndarray, cfg: GSCPMConfig,
 
 
 # ------------------------------------------------------------------ driver ----
+@jax.jit
+def fold_task_keys(key: jax.Array, task_ids: jnp.ndarray) -> jax.Array:
+    """Per-task RNG streams (jitted: per-round key building is dispatch-only,
+    not a re-traced eager vmap)."""
+    return jax.vmap(lambda t: jax.random.fold_in(key, t))(task_ids)
+
+
 def gscpm_search(board: jnp.ndarray, to_move: int, cfg: GSCPMConfig,
                  key: jax.Array) -> tuple[Tree, dict[str, Any]]:
     """Full GSCPM search (paper Fig 4): schedule tasks, return tree + stats."""
@@ -292,8 +305,7 @@ def gscpm_search(board: jnp.ndarray, to_move: int, cfg: GSCPMConfig,
     playouts = 0
     masked_lane_iters = 0
     for rnd in schedule:
-        task_keys = jax.vmap(lambda t: jax.random.fold_in(key, t))(
-            jnp.asarray(rnd.task_ids, dtype=jnp.int32))
+        task_keys = fold_task_keys(key, jnp.asarray(rnd.task_ids, dtype=jnp.int32))
         active = jnp.asarray(rnd.active)
         tree = run_chunk(tree, board, cfg, task_keys, active,
                          jnp.asarray(rnd.m, dtype=jnp.int32))

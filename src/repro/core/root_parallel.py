@@ -1,0 +1,279 @@
+"""Root-parallel batched GSCPM: many trees, one jitted program (DESIGN.md §3).
+
+The source paper scales ONE shared tree across 244 threads (tree
+parallelism); its companion studies (arXiv:1409.4297, arXiv:1704.00325) use
+the orthogonal axis — *root parallelism*: E independent trees search the same
+(or different) root positions and their root statistics are merged. On SPMD
+hardware the ensemble axis is free parallel width: the E trees are stacked
+into one forest pytree (leading axis on every `Tree` leaf) and a whole GSCPM
+round advances ALL of them in a single jitted dispatch — `jax.vmap` over the
+single-tree chunk, sharded across devices along the ensemble axis when more
+than one device is visible.
+
+Three merge disciplines:
+
+- **visit-sum** (``ensemble_best_move``): per-move root-child visits are
+  summed across members; play the argmax. The classic root-parallel merge.
+- **majority vote** (``majority_vote_move``): each member votes its own
+  most-visited move; play the mode.
+- **periodic sync** (``sync_root_stats``): every ``merge_every`` rounds each
+  member's root-child statistics are refreshed with the *sum of every other
+  member's own contribution*, so later selection is ensemble-informed.
+  Contributions are tracked as deltas (``RootSyncState``), which makes the
+  merge exact — repeated syncs never double-count, and after a final sync
+  every member's root visit count equals the total playouts of the whole
+  ensemble (tested in tests/test_root_parallel.py).
+
+The same batching serves two workloads: an ensemble on one position
+(stronger move choice) and one tree per position (multi-request serving —
+see ``repro.serve.mcts_decode.mcts_decode_search_batch`` for the LM twin).
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scheduler as sched
+from repro.core.gscpm import GSCPMConfig, fold_task_keys, sync_iteration
+from repro.core.tree import (
+    Tree,
+    best_child,
+    forest_member,
+    forest_size,
+    init_forest,
+    root_move_stats,
+    root_value,
+)
+
+
+# ----------------------------------------------------------- forest chunk ----
+def _forest_chunk(forest: Tree, boards: jnp.ndarray, cfg: GSCPMConfig,
+                  task_keys: jnp.ndarray, active: jnp.ndarray,
+                  m: jnp.ndarray) -> Tree:
+    """`gscpm.run_chunk` vmapped over the ensemble axis — one program for E
+    trees. All members share the round's grain `m`; per-member RNG streams
+    keep their searches decorrelated."""
+
+    def one_tree(tree, board, keys, act):
+        def body(i, tr):
+            iter_keys = jax.vmap(lambda tk: jax.random.fold_in(tk, i))(keys)
+            return sync_iteration(tr, board, cfg, iter_keys, act)
+
+        return jax.lax.fori_loop(0, m, body, tree)
+
+    return jax.vmap(one_tree)(forest, boards, task_keys, active)
+
+
+run_chunk_forest = jax.jit(_forest_chunk, static_argnames=("cfg",),
+                           donate_argnums=(0,))
+
+
+def ensemble_sharding(n_trees: int):
+    """NamedSharding splitting the ensemble axis over devices (or None).
+
+    vmap batching is embarrassingly parallel, so placing the forest with its
+    leading axis sharded lets XLA partition the whole chunk — the multi-chip
+    analogue of the paper's per-thread trees (DESIGN.md §3/§9).
+    """
+    devices = jax.devices()
+    if len(devices) <= 1 or n_trees % len(devices) != 0:
+        return None
+    mesh = jax.sharding.Mesh(np.asarray(devices), ("ens",))
+    return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec("ens"))
+
+
+@jax.jit
+def fold_member_task_keys(member_keys: jax.Array,
+                          task_ids: jnp.ndarray) -> jax.Array:
+    """(E,) member streams × (W,) task ids -> (E, W) per-lane streams
+    (jitted so per-round key building is dispatch-only)."""
+    return jax.vmap(lambda mk: jax.vmap(
+        lambda t: jax.random.fold_in(mk, t))(task_ids))(member_keys)
+
+
+# ----------------------------------------------------------------- merges ----
+@functools.partial(jax.jit, static_argnames=("n_moves",))
+def merged_root_stats(forest: Tree, n_moves: int):
+    """Summed per-move root (visits, wins) across members: (n_moves,) each."""
+    v, w = jax.vmap(lambda t: root_move_stats(t, n_moves))(forest)
+    return v.sum(axis=0), w.sum(axis=0)
+
+
+def ensemble_best_move(forest: Tree, n_moves: int) -> jnp.ndarray:
+    """Visit-sum merge: argmax of summed root-child visits."""
+    visits, _ = merged_root_stats(forest, n_moves)
+    return jnp.argmax(visits).astype(jnp.int32)
+
+
+def majority_vote_move(forest: Tree, n_moves: int) -> jnp.ndarray:
+    """Mode of the per-member most-visited moves (ties -> lowest move id)."""
+    votes = jax.vmap(best_child)(forest)  # (E,)
+    counts = jnp.zeros((n_moves,), jnp.int32).at[
+        jnp.clip(votes, 0, n_moves - 1)].add(1)
+    return jnp.argmax(counts).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_moves",))
+def forest_summary(forest: Tree, n_moves: int) -> dict[str, jnp.ndarray]:
+    """All end-of-search reductions in one jitted program (a driver that
+    computes them eagerly pays several vmap re-traces per search)."""
+    visits, _ = merged_root_stats(forest, n_moves)
+    return {
+        "member_best_moves": jax.vmap(best_child)(forest),
+        "member_root_values": jax.vmap(root_value)(forest),
+        "best_move_sum": jnp.argmax(visits).astype(jnp.int32),
+        "best_move_vote": majority_vote_move(forest, n_moves),
+    }
+
+
+# ---------------------------------------------------------- periodic sync ----
+class RootSyncState(NamedTuple):
+    """Foreign (other-member) statistics already injected into each tree.
+
+    Tracking what was injected lets ``sync_root_stats`` recover each member's
+    OWN contribution exactly (own = in-tree − injected), so the merge never
+    double-counts across repeated syncs.
+    """
+
+    visits: jnp.ndarray       # (E, n_moves) f32 injected per-move visits
+    wins: jnp.ndarray         # (E, n_moves) f32 injected per-move wins
+    root_visits: jnp.ndarray  # (E,) f32 injected root-node visits
+    root_wins: jnp.ndarray    # (E,) f32 injected root-node wins
+
+
+def init_sync_state(n_trees: int, n_moves: int) -> RootSyncState:
+    z = jnp.zeros((n_trees, n_moves), jnp.float32)
+    z1 = jnp.zeros((n_trees,), jnp.float32)
+    return RootSyncState(visits=z, wins=z, root_visits=z1, root_wins=z1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_moves",))
+def sync_root_stats(forest: Tree, state: RootSyncState, n_moves: int
+                    ) -> tuple[Tree, RootSyncState]:
+    """Refresh every member's root stats with the other members' own work.
+
+    After the call, member e's root child for move a holds
+    ``own_e(a) + Σ_{e'≠e} own_e'(a)`` — for the moves e has expanded; moves a
+    member has not discovered receive nothing (it cannot host a child row
+    for them), which is the standard root-parallel partial-merge semantics.
+    """
+    dense_v, dense_w = jax.vmap(lambda t: root_move_stats(t, n_moves))(forest)
+    own_v = dense_v - state.visits            # (E, M) each member's own work
+    own_w = dense_w - state.wins
+    new_f_v = own_v.sum(axis=0)[None, :] - own_v   # Σ others' own
+    new_f_w = own_w.sum(axis=0)[None, :] - own_w
+    own_rv = forest.visits[:, 0] - state.root_visits
+    own_rw = forest.wins[:, 0] - state.root_wins
+    new_f_rv = own_rv.sum() - own_rv
+    new_f_rw = own_rw.sum() - own_rw
+
+    def write(tree, old_fv, old_fw, nfv, nfw, d_rv, d_rw):
+        cap = tree.cap
+        slots = tree.children[0]
+        valid = jnp.arange(slots.shape[0]) < tree.n_children[0]
+        safe = jnp.where(valid, slots, cap)
+        mv = jnp.clip(jnp.where(valid, tree.move[safe], 0), 0, n_moves - 1)
+        visits = tree.visits.at[safe].add(
+            jnp.where(valid, nfv[mv] - old_fv[mv], 0.0))
+        wins = tree.wins.at[safe].add(
+            jnp.where(valid, nfw[mv] - old_fw[mv], 0.0))
+        visits = visits.at[cap].set(0.0).at[0].add(d_rv)
+        wins = wins.at[cap].set(0.0).at[0].add(d_rw)
+        # record only what was actually injected (moves with a child row)
+        has = jnp.zeros((n_moves + 1,), bool).at[
+            jnp.where(valid, mv, n_moves)].set(True)[:n_moves]
+        rec_v = jnp.where(has, nfv, 0.0)
+        rec_w = jnp.where(has, nfw, 0.0)
+        return tree._replace(visits=visits, wins=wins), rec_v, rec_w
+
+    forest, rec_v, rec_w = jax.vmap(write)(
+        forest, state.visits, state.wins, new_f_v, new_f_w,
+        new_f_rv - state.root_visits, new_f_rw - state.root_wins)
+    return forest, RootSyncState(visits=rec_v, wins=rec_w,
+                                 root_visits=new_f_rv, root_wins=new_f_rw)
+
+
+# ------------------------------------------------------------------ driver ----
+def gscpm_search_batch(boards: jnp.ndarray, to_move, cfg: GSCPMConfig,
+                       key: jax.Array, *, n_trees: int | None = None,
+                       merge_every: int = 0
+                       ) -> tuple[Tree, dict[str, Any]]:
+    """Root-parallel GSCPM over E trees in one jitted program per round.
+
+    boards: (E, n_cells) — one root position per member (multi-request
+    search), or (n_cells,) with ``n_trees=E`` — an E-member ensemble on one
+    position. ``to_move`` is scalar or (E,). ``merge_every > 0`` enables
+    periodic root synchronization (plus a final sync before move selection).
+
+    Per-round work is ONE dispatch of ``run_chunk_forest`` — no per-tree
+    Python loop; with multiple devices the ensemble axis is sharded.
+    """
+    boards = jnp.asarray(boards)
+    if boards.ndim == 1:
+        boards = jnp.tile(boards[None, :], (n_trees or 1, 1))
+    E = boards.shape[0]
+    if n_trees is not None and n_trees != E:
+        raise ValueError(f"n_trees={n_trees} != boards.shape[0]={E}")
+    spec = cfg.spec
+    n_moves = spec.n_cells
+
+    forest = init_forest(E, cfg.tree_cap, n_moves, to_move)
+    member_keys = fold_task_keys(key, jnp.arange(E, dtype=jnp.int32))
+    sharding = ensemble_sharding(E)
+    if sharding is not None:
+        forest, boards, member_keys = jax.device_put(
+            (forest, boards, member_keys), sharding)
+    schedule = sched.make_schedule(
+        cfg.n_playouts, cfg.n_tasks, cfg.n_workers, cfg.scheduler)
+    state = init_sync_state(E, n_moves) if merge_every > 0 else None
+
+    t0 = time.perf_counter()
+    playouts_per_tree = 0
+    n_syncs = 0
+    for r, rnd in enumerate(schedule):
+        task_keys = fold_member_task_keys(
+            member_keys, jnp.asarray(rnd.task_ids, dtype=jnp.int32))
+        active = jnp.tile(jnp.asarray(rnd.active)[None, :], (E, 1))
+        forest = run_chunk_forest(forest, boards, cfg, task_keys, active,
+                                  jnp.asarray(rnd.m, dtype=jnp.int32))
+        playouts_per_tree += int(rnd.active.sum()) * rnd.m
+        if merge_every > 0 and ((r + 1) % merge_every == 0
+                                or r == len(schedule) - 1):
+            forest, state = sync_root_stats(forest, state, n_moves)
+            n_syncs += 1
+    jax.block_until_ready(forest.visits)
+    dt = time.perf_counter() - t0
+
+    playouts = E * playouts_per_tree
+    summary = jax.device_get(forest_summary(forest, n_moves))
+    stats = {
+        "time_s": dt,
+        "n_trees": E,
+        "playouts": playouts,
+        "playouts_per_tree": playouts_per_tree,
+        "playouts_per_s": playouts / max(dt, 1e-9),
+        "rounds": len(schedule),
+        "grain": cfg.grain,
+        "n_syncs": n_syncs,
+        "sharded": sharding is not None,
+        "tree_nodes": [int(n) for n in np.asarray(forest.n_nodes)],
+        "member_best_moves": summary["member_best_moves"].tolist(),
+        "member_root_values": summary["member_root_values"].tolist(),
+        "best_move_sum": int(summary["best_move_sum"]),
+        "best_move_vote": int(summary["best_move_vote"]),
+    }
+    return forest, stats
+
+
+def check_forest_invariants(forest: Tree) -> None:
+    """Per-member structural invariants (host-side, used by tests)."""
+    from repro.core.tree import check_invariants
+
+    for e in range(forest_size(forest)):
+        check_invariants(forest_member(forest, e))

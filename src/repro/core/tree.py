@@ -8,6 +8,12 @@ of atomics (DESIGN.md §2).
 
 All shapes are static; the tree is a pytree and can be carried through
 `lax.fori_loop` / `lax.while_loop` and `jit`.
+
+Every op indexes node axes from the RIGHT (``shape[-1]``), so a *forest* — E
+independent trees stacked along a leading ensemble axis (DESIGN.md §3) — is
+also a valid ``Tree`` whose per-member ops are recovered with ``jax.vmap``.
+``init_forest`` / ``forest_member`` / ``forest_size`` are the ensemble
+helpers; the root-parallel search layer lives in ``repro.core.root_parallel``.
 """
 
 from __future__ import annotations
@@ -40,11 +46,13 @@ class Tree(NamedTuple):
 
     @property
     def cap(self) -> int:
-        return self.parent.shape[0] - 1
+        # shape[-1], not shape[0]: a forest (leading ensemble axis) must
+        # report the same per-member capacity as a single tree
+        return self.parent.shape[-1] - 1
 
     @property
     def max_children(self) -> int:
-        return self.children.shape[1]
+        return self.children.shape[-1]
 
 
 def init_tree(cap: int, max_children: int, root_to_move) -> Tree:
@@ -121,6 +129,49 @@ def root_value(tree: Tree) -> jnp.ndarray:
     w = jnp.where(valid, tree.wins[safe], 0.0).sum()
     n = jnp.where(valid, tree.visits[safe], 0.0).sum()
     return w / jnp.maximum(n, 1.0)
+
+
+# --------------------------------------------------------------- forests ----
+def init_forest(n_trees: int, cap: int, max_children: int,
+                root_to_move) -> Tree:
+    """E fresh trees stacked along a leading ensemble axis (DESIGN.md §3).
+
+    ``root_to_move`` is a scalar (shared by all members) or an (E,) vector
+    (one independent root position per member, e.g. multi-request serving).
+    """
+    tm = jnp.broadcast_to(jnp.asarray(root_to_move, dtype=jnp.int32),
+                          (n_trees,))
+    return jax.vmap(lambda t: init_tree(cap, max_children, t))(tm)
+
+
+def forest_size(forest: Tree) -> int:
+    """Number of ensemble members E (leading axis of every leaf)."""
+    return forest.parent.shape[0]
+
+
+def forest_member(forest: Tree, e: int) -> Tree:
+    """Extract member `e` as a plain single tree (host-side helper)."""
+    return jax.tree.map(lambda x: x[e], forest)
+
+
+def root_move_stats(tree: Tree, n_moves: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Dense per-move (visits, wins) of the root's children.
+
+    Returns two (n_moves,) f32 arrays indexed by move id; moves without a
+    root child are zero. This is the merge currency of root parallelism:
+    per-member child *slots* are in discovery order, but per-move dense
+    vectors add across ensemble members (DESIGN.md §3).
+    """
+    slots = tree.children[0]
+    valid = jnp.arange(slots.shape[0]) < tree.n_children[0]
+    safe = jnp.where(valid, slots, tree.cap)
+    mv = jnp.where(valid, tree.move[safe], n_moves)  # pad bucket == n_moves
+    mv = jnp.clip(mv, 0, n_moves)
+    visits = jnp.zeros((n_moves + 1,), jnp.float32).at[mv].add(
+        jnp.where(valid, tree.visits[safe], 0.0))[:n_moves]
+    wins = jnp.zeros((n_moves + 1,), jnp.float32).at[mv].add(
+        jnp.where(valid, tree.wins[safe], 0.0))[:n_moves]
+    return visits, wins
 
 
 # ------------------------------------------------------------ invariants ----

@@ -10,7 +10,7 @@ one pass over VMEM-resident stats.
 with virtual loss folded into n_j, unvisited-first semantics (score 1e30),
 invalid-slot masking (-1e30), and bounded tie-break noise — bit-for-bit the
 same selection as ``repro.core.uct`` (tests sweep W/C/dtype and compare the
-chosen индices against the oracle).
+chosen indices against the oracle).
 
 Tiling: grid over W blocks; child axis padded to the 128-lane boundary and
 kept whole per tile (C <= a few hundred for Hex/LM decode — one tile row).

@@ -18,7 +18,8 @@ from __future__ import annotations
 import math
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import make_auto_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -31,9 +32,7 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"mesh {shape} needs {need} devices, found {len(devs)}. "
             "For the dry-run set XLA_FLAGS=--xla_force_host_platform_"
             "device_count=512 BEFORE importing jax (dryrun.py does this).")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes),
-                         devices=devs[:need])
+    return make_auto_mesh(shape, axes, devices=devs[:need])
 
 
 def make_host_mesh(model_axis: int | None = None):
@@ -44,8 +43,7 @@ def make_host_mesh(model_axis: int | None = None):
     """
     n = len(jax.devices())
     m = model_axis or max(d for d in (1, 2, 4, 8) if n % d == 0)
-    return jax.make_mesh((n // m, m), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_auto_mesh((n // m, m), ("data", "model"))
 
 
 def mesh_dims(mesh) -> dict[str, int]:

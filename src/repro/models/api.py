@@ -44,6 +44,21 @@ def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
     return tfm.lm_cache_specs(cfg, batch, max_len)
 
 
+def cache_batch_axes(cfg: ModelConfig, batch: int, max_len: int,
+                     src_len: int | None = None):
+    """Pytree (matching the cache treedef) of each leaf's batch-axis index.
+
+    Cache leaves are layer-stacked, so the batch axis sits at a different
+    position per leaf; serving code that copies or splits per-request rows
+    (SlotEngine, mcts_decode_search_batch) derives the indices here.
+    """
+    spec_tree = cache_specs(cfg, batch, max_len, src_len)
+    is_leaf = lambda x: (isinstance(x, tuple) and len(x) == 2
+                         and hasattr(x[0], "shape"))
+    return jax.tree.map(lambda t: t[1].index("batch"), spec_tree,
+                        is_leaf=is_leaf)
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                src_len: int | None = None):
     if cfg.family == "encdec":

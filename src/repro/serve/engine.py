@@ -6,10 +6,19 @@ cells. ``SlotEngine`` is the host-side batcher: a fixed pool of B slots,
 each holding one request's position; finished slots are refilled from the
 queue without recompiling (shapes never change — TPU-friendly continuous
 batching).
+
+``MCTSSlotEngine`` is the search-guided sibling (DESIGN.md §3/§4): the same
+fixed pool of B slots, but every slot owns a GSCPM token tree and each
+engine tick runs ONE root-parallel batched search
+(``mcts_decode.mcts_decode_search_batch`` — all slots advance through a
+single jitted step per round) and commits one searched token per active
+slot. Empty slots ride along as masked requests, so arrival patterns never
+change shapes and the whole serve lifetime uses one compiled search program.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Any, Callable
 
@@ -61,7 +70,19 @@ class Request:
     done: bool = False
 
 
-class SlotEngine:
+class _RunLoop:
+    """Shared drain loop: tick until the queue and all slots are empty."""
+
+    def run(self, max_ticks: int = 10_000) -> list[Request]:
+        ticks = 0
+        while (self.queue or any(r is not None for r in self.active)) \
+                and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.finished
+
+
+class SlotEngine(_RunLoop):
     """Fixed-B continuous batcher over the jitted prefill/decode steps.
 
     Per-slot prefill writes the prompt's KV into the slot's rows of the
@@ -84,12 +105,8 @@ class SlotEngine:
         self.cache = api.init_cache(cfg, n_slots, max_len)
         # cache leaves are layer-stacked: locate each leaf's batch axis so
         # per-slot copies index the right dimension
-        spec_tree = api.cache_specs(cfg, n_slots, max_len)
-        is_leaf = lambda x: (isinstance(x, tuple) and len(x) == 2
-                             and hasattr(x[0], "shape"))
-        self._batch_axes = [a.index("batch") for a in jax.tree.leaves(
-            jax.tree.map(lambda t: t[1], spec_tree, is_leaf=is_leaf),
-            is_leaf=lambda x: isinstance(x, tuple))]
+        self._batch_axes = jax.tree.leaves(
+            api.cache_batch_axes(cfg, n_slots, max_len))
         self.pos = np.zeros((n_slots,), np.int32)       # next write position
         self.active: list[Request | None] = [None] * n_slots
         self.queue: list[Request] = []
@@ -153,9 +170,83 @@ class SlotEngine:
                 self.active[s] = None
         return n_active
 
-    def run(self, max_ticks: int = 10_000) -> list[Request]:
-        ticks = 0
-        while (self.queue or any(self.active)) and ticks < max_ticks:
-            self.step()
-            ticks += 1
-        return self.finished
+
+class MCTSSlotEngine(_RunLoop):
+    """Multi-user MCTS-decode server: B slots, B trees, one jitted step.
+
+    Each tick = admit waiting requests into free slots, run one batched
+    GSCPM search over ALL active slots' prompts (each slot's tree is an
+    independent root-parallel member; see ``mcts_decode_search_batch``),
+    commit each slot's most-visited root token, retire finished requests.
+
+    The token buffer is a fixed (B, max_prompt_len) matrix and prompt
+    lengths are traced, so admissions, commits, and retirements never
+    recompile — the search analogue of ``SlotEngine``'s continuous batching.
+    ``max_prompt_len`` must cover every request's prompt PLUS its
+    ``max_new`` generated tokens (enforced at submit).
+    """
+
+    def __init__(self, params, cfg: ModelConfig, dcfg, n_slots: int,
+                 max_prompt_len: int, eos_id: int = 2, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.dcfg = dcfg
+        self.B = n_slots
+        self.max_prompt_len = max_prompt_len
+        self.eos_id = eos_id
+        self.key = jax.random.key(seed)
+
+        self.tokens = np.zeros((n_slots, max_prompt_len), np.int32)
+        self.lens = np.ones((n_slots,), np.int32)   # >=1: masked slots still
+        self.active: list[Request | None] = [None] * n_slots  # index pos len-1
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        # bounded tick history: a long-lived server must not grow host
+        # memory with one dict per committed token
+        self.search_stats: collections.deque = collections.deque(maxlen=256)
+
+    def submit(self, req: Request):
+        if len(req.prompt) + req.max_new > self.max_prompt_len:
+            raise ValueError(
+                f"prompt ({len(req.prompt)}) + max_new ({req.max_new}) "
+                f"exceeds max_prompt_len ({self.max_prompt_len})")
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.B):
+            if self.active[s] is None and self.queue:
+                req = self.queue.pop(0)
+                L = len(req.prompt)
+                self.tokens[s, :] = 0
+                self.tokens[s, :L] = np.asarray(req.prompt, np.int32)
+                self.lens[s] = L
+                self.active[s] = req
+
+    def step(self) -> int:
+        """One tick: admit, search all slots in lockstep, commit one token
+        per active slot, retire finished. Returns #active slots served."""
+        from repro.serve.mcts_decode import mcts_decode_search_batch
+
+        self._admit()
+        mask = np.array([r is not None for r in self.active])
+        if not mask.any():
+            return 0
+        self.key, k = jax.random.split(self.key)
+        _, stats = mcts_decode_search_batch(
+            self.params, self.cfg, jnp.asarray(self.tokens), self.dcfg, k,
+            prompt_lens=jnp.asarray(self.lens),
+            request_mask=jnp.asarray(mask))
+        self.search_stats.append(stats)
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(stats["best_tokens"][s])
+            req.out.append(tok)
+            self.tokens[s, self.lens[s]] = tok
+            self.lens[s] += 1
+            if (tok == self.eos_id or len(req.out) >= req.max_new
+                    or self.lens[s] >= self.max_prompt_len):
+                req.done = True
+                self.finished.append(req)
+                self.active[s] = None
+        return int(mask.sum())

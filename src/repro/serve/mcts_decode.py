@@ -23,6 +23,15 @@ Mapping of MCTS steps onto the LM:
 Every playout replays its path through the decode step (positions after the
 prompt are rewritten each iteration, so one (W, S_max) cache serves all
 iterations without copying).
+
+Multi-request root parallelism (DESIGN.md §3): ``mcts_decode_search_batch``
+stacks B independent token trees (one per concurrent request) into a forest
+and advances ALL of them through one shared jitted step — ``jax.vmap`` over
+the single-request chunk, with the KV cache's per-leaf batch axis split into
+(requests, lanes). ``prompt_len`` is a *traced* per-request scalar, so a
+batch may mix prompt lengths (shorter prompts are left-aligned in a padded
+token matrix; decode masks positions beyond each request's own cursor) and
+token commits never recompile.
 """
 
 from __future__ import annotations
@@ -34,11 +43,13 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import scheduler as sched
 from repro.core import uct as uct_mod
-from repro.core.gscpm import expand_batch
-from repro.core.tree import NO_NODE, Tree, init_tree
+from repro.core.gscpm import fold_task_keys, expand_batch
+from repro.core.root_parallel import fold_member_task_keys
+from repro.core.tree import NO_NODE, Tree, best_child, init_forest, init_tree
 from repro.models import api
 from repro.models.common import ModelConfig
 
@@ -134,11 +145,17 @@ def backup_values(tree: Tree, paths: jnp.ndarray, values: jnp.ndarray,
 
 # ---------------------------------------------------------- one iteration ----
 def _iteration(tree: Tree, params, mcfg: ModelConfig, cfg: MCTSDecodeConfig,
-               cache, root_logits: jnp.ndarray, prompt_len: int,
+               cache, root_logits: jnp.ndarray, prompt_len,
                iter_keys: jnp.ndarray, active: jnp.ndarray):
-    """One batched GSCPM iteration of width W against the shared token tree."""
+    """One batched GSCPM iteration of width W against the shared token tree.
+
+    ``prompt_len`` is a traced i32 scalar (per-request under vmap), not a
+    static python int — decode positions are computed from it, so one
+    compiled program serves every prompt length up to the cache size.
+    """
     W = cfg.n_workers
     V = root_logits.shape[-1]
+    prompt_len = jnp.asarray(prompt_len, jnp.int32)
 
     sel = jax.vmap(lambda k: select_token_path(
         tree, cfg, jax.random.fold_in(k, 0)))(iter_keys)
@@ -150,7 +167,7 @@ def _iteration(tree: Tree, params, mcfg: ModelConfig, cfg: MCTSDecodeConfig,
         cache, leaf_logits = carry
         tok_t = toks[:, t][:, None]                            # (W,1)
         logits, cache = api.decode(params, mcfg, tok_t,
-                                   jnp.int32(prompt_len) + t, cache)
+                                   prompt_len + t, cache)
         leaf_logits = jnp.where((depths == t + 1)[:, None],
                                 logits[:, 0, :], leaf_logits)
         return cache, leaf_logits
@@ -171,7 +188,7 @@ def _iteration(tree: Tree, params, mcfg: ModelConfig, cfg: MCTSDecodeConfig,
         jnp.where(expanded[:, None], new_ids[:, None], tree.cap), paths)
 
     # --- rollout: expanded token first, then sampled continuation --------
-    start_pos = jnp.int32(prompt_len) + cfg.max_depth  # parked replay ends here
+    start_pos = prompt_len + cfg.max_depth   # parked replay ends here
 
     def rollout(cache):
         tok0 = jnp.where(expanded, jnp.maximum(moves, 0),
@@ -203,12 +220,13 @@ def _iteration(tree: Tree, params, mcfg: ModelConfig, cfg: MCTSDecodeConfig,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("mcfg", "cfg", "prompt_len"),
+                   static_argnames=("mcfg", "cfg"),
                    donate_argnums=(0, 4))
 def run_chunk(tree: Tree, params, mcfg: ModelConfig, cfg: MCTSDecodeConfig,
-              cache, root_logits, prompt_len: int, task_keys, active,
+              cache, root_logits, prompt_len, task_keys, active,
               m) -> tuple[Tree, Any]:
-    """m sync iterations — one task grain per lane (jitted once per config)."""
+    """m sync iterations — one task grain per lane (jitted once per config;
+    ``prompt_len`` is traced, so prompt length changes do not recompile)."""
 
     def body(i, carry):
         tree, cache = carry
@@ -217,6 +235,36 @@ def run_chunk(tree: Tree, params, mcfg: ModelConfig, cfg: MCTSDecodeConfig,
                           prompt_len, iter_keys, active)
 
     return jax.lax.fori_loop(0, m, body, (tree, cache))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mcfg", "cfg", "cache_axes_def"),
+                   donate_argnums=(0, 4))
+def run_chunk_batch(forest: Tree, params, mcfg: ModelConfig,
+                    cfg: MCTSDecodeConfig, cache, root_logits, prompt_lens,
+                    task_keys, active, m, cache_axes_def) -> tuple[Tree, Any]:
+    """`run_chunk` vmapped over B concurrent requests — one jitted program.
+
+    forest: B stacked trees; cache leaves carry a (B, W) split batch axis at
+    each leaf's own position (``cache_axes_def``, hashable static arg);
+    root_logits (B, V); prompt_lens (B,); task_keys/active (B, W).
+    """
+    cache_axes = jax.tree.unflatten(
+        jax.tree.structure(cache), list(cache_axes_def))
+
+    def one(tree, cache_b, rl, pl, keys, act):
+        def body(i, carry):
+            tr, ch = carry
+            iter_keys = jax.vmap(
+                lambda tk: jax.random.fold_in(tk, i))(keys)
+            return _iteration(tr, params, mcfg, cfg, ch, rl, pl,
+                              iter_keys, act)
+
+        return jax.lax.fori_loop(0, m, body, (tree, cache_b))
+
+    return jax.vmap(one, in_axes=(0, cache_axes, 0, 0, 0, 0),
+                    out_axes=(0, cache_axes))(
+        forest, cache, root_logits, prompt_lens, task_keys, active)
 
 
 # ------------------------------------------------------------------ driver ----
@@ -245,21 +293,17 @@ def mcts_decode_search(params, mcfg: ModelConfig, prompt: jnp.ndarray,
     t0 = time.perf_counter()
     playouts = 0
     for rnd in schedule:
-        task_keys = jax.vmap(lambda t: jax.random.fold_in(key, t))(
-            jnp.asarray(rnd.task_ids, dtype=jnp.int32))
+        task_keys = fold_task_keys(key, jnp.asarray(rnd.task_ids, dtype=jnp.int32))
         active = jnp.asarray(rnd.active)
         tree, cache = run_chunk(tree, params, mcfg, cfg, cache, root_logits,
-                                prompt_len, task_keys, active,
+                                jnp.asarray(prompt_len, jnp.int32),
+                                task_keys, active,
                                 jnp.asarray(rnd.m, jnp.int32))
         playouts += int(rnd.active.sum()) * rnd.m
     jax.block_until_ready(tree.visits)
     dt = time.perf_counter() - t0
 
-    slots = tree.children[0]
-    valid = jnp.arange(tree.max_children) < tree.n_children[0]
-    safe = jnp.where(valid, slots, tree.cap)
-    counts = jnp.where(valid, tree.visits[safe], -jnp.inf)
-    best = tree.move[safe[jnp.argmax(counts)]]
+    best = best_child(tree)
     stats = {
         "time_s": dt,
         "playouts": playouts,
@@ -270,6 +314,120 @@ def mcts_decode_search(params, mcfg: ModelConfig, prompt: jnp.ndarray,
         "root_children": int(tree.n_children[0]),
     }
     return tree, stats
+
+
+# --------------------------------------------- multi-request root parallel ----
+def mcts_decode_search_batch(params, mcfg: ModelConfig, prompts: jnp.ndarray,
+                             cfg: MCTSDecodeConfig, key: jax.Array, *,
+                             prompt_lens: jnp.ndarray | None = None,
+                             request_mask: jnp.ndarray | None = None,
+                             batch_extras: dict | None = None
+                             ) -> tuple[Tree, dict[str, Any]]:
+    """Root-parallel GSCPM decode: B requests, B trees, ONE jitted step.
+
+    prompts: (B, P) i32, left-aligned; rows shorter than P declare their true
+    length in ``prompt_lens`` (pad tail tokens are never attended: root
+    logits come from a decode at each request's own last real position, and
+    every later decode masks positions beyond its cursor). ``request_mask``
+    (B,) bool masks whole requests (their lanes run dead and their trees stay
+    empty) — the slot-engine's empty-slot mechanism.
+
+    Per round, ALL B trees advance through one ``run_chunk_batch`` dispatch;
+    there is no per-request Python loop (DESIGN.md §3).
+    """
+    prompts = jnp.asarray(prompts, jnp.int32)
+    if prompts.ndim == 1:
+        prompts = prompts[None, :]
+    B, P = prompts.shape
+    W = cfg.n_workers
+    lens = (jnp.full((B,), P, jnp.int32) if prompt_lens is None
+            else jnp.asarray(prompt_lens, jnp.int32))
+    mask = (jnp.ones((B,), bool) if request_mask is None
+            else jnp.asarray(request_mask, bool))
+    max_len = P + cfg.max_depth + cfg.rollout_len + 1
+
+    # request-major tiling: lane w of request b sits at row b*W + w
+    tiled = jnp.repeat(prompts, W, axis=0)                       # (B*W, P)
+    extras = {k: jnp.repeat(jnp.asarray(v), W, axis=0)
+              for k, v in (batch_extras or {}).items()}
+    _, cache = api.prefill(params, mcfg, {"tokens": tiled, **extras}, max_len)
+    # root logits at each request's true last position (prefill's last-column
+    # logits would read a pad token for short rows); the rewrite of the last
+    # real token's KV is idempotent
+    last_tok = prompts[jnp.arange(B), lens - 1]
+    logits, cache = api.decode(params, mcfg,
+                               jnp.repeat(last_tok, W)[:, None],
+                               jnp.repeat(lens - 1, W), cache)
+    root_logits = logits.reshape(B, W, -1)[:, 0, :].astype(jnp.float32)
+
+    # split every cache leaf's (B*W) batch axis into (B, W) at its own index
+    axes_tree = api.cache_batch_axes(mcfg, B * W, max_len)
+    cache = jax.tree.map(
+        lambda x, bi: x.reshape(x.shape[:bi] + (B, W) + x.shape[bi + 1:]),
+        cache, axes_tree)
+    cache_axes_def = tuple(jax.tree.leaves(axes_tree))
+
+    forest = init_forest(B, cfg.tree_cap, cfg.branch, 1)
+    member_keys = fold_task_keys(key, jnp.arange(B, dtype=jnp.int32))
+    schedule = sched.make_schedule(
+        cfg.n_playouts, cfg.n_tasks, cfg.n_workers, cfg.scheduler)
+
+    t0 = time.perf_counter()
+    playouts_per_req = 0
+    for rnd in schedule:
+        task_keys = fold_member_task_keys(
+            member_keys, jnp.asarray(rnd.task_ids, dtype=jnp.int32))
+        active = jnp.asarray(rnd.active)[None, :] & mask[:, None]   # (B, W)
+        forest, cache = run_chunk_batch(
+            forest, params, mcfg, cfg, cache, root_logits, lens,
+            task_keys, active, jnp.asarray(rnd.m, jnp.int32),
+            cache_axes_def)
+        playouts_per_req += int(rnd.active.sum()) * rnd.m
+    jax.block_until_ready(forest.visits)
+    dt = time.perf_counter() - t0
+
+    n_req = int(np.asarray(mask).sum())
+    # best_child returns the most-visited root child's move (token); a
+    # masked request's empty tree yields NO_NODE (-1)
+    best = np.asarray(jax.vmap(best_child)(forest))
+    playouts = n_req * playouts_per_req
+    stats = {
+        "time_s": dt,
+        "n_requests": B,
+        "n_active_requests": n_req,
+        "playouts": playouts,
+        "playouts_per_request": playouts_per_req,
+        "playouts_per_s": playouts / max(dt, 1e-9),
+        "grain": cfg.grain,
+        "tree_nodes": [int(n) for n in np.asarray(forest.n_nodes)],
+        "best_tokens": best.tolist(),
+        "root_children": [int(n) for n in np.asarray(forest.n_children[:, 0])],
+    }
+    return forest, stats
+
+
+def mcts_generate_batch(params, mcfg: ModelConfig, prompts, prompt_lens,
+                        n_tokens: int, cfg: MCTSDecodeConfig, key: jax.Array
+                        ) -> tuple[np.ndarray, np.ndarray, list]:
+    """Lockstep multi-request generation: one batched search per emitted
+    token, all requests committing together. The token matrix keeps a fixed
+    width of ``P0 + n_tokens``, so the whole generation reuses one compiled
+    search program (prompt lengths are traced)."""
+    prompts = np.asarray(prompts, np.int32)
+    B, P0 = prompts.shape
+    lens = np.asarray(prompt_lens, np.int32).copy()
+    buf = np.zeros((B, P0 + n_tokens), np.int32)
+    buf[:, :P0] = prompts
+    all_stats = []
+    for i in range(n_tokens):
+        _, stats = mcts_decode_search_batch(
+            params, mcfg, jnp.asarray(buf), cfg, jax.random.fold_in(key, i),
+            prompt_lens=jnp.asarray(lens))
+        toks = np.asarray(stats["best_tokens"], np.int32)
+        buf[np.arange(B), lens] = toks
+        lens += 1
+        all_stats.append(stats)
+    return buf, lens, all_stats
 
 
 def mcts_generate(params, mcfg: ModelConfig, prompt: jnp.ndarray,

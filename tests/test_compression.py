@@ -10,8 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypcompat import given, settings, st
 
 from repro.optim.compression import dequantize_int8, quantize_int8
 
@@ -46,11 +45,12 @@ def test_compressed_psum_subprocess():
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
+from repro import compat
+from repro.compat import make_auto_mesh
 from repro.optim.compression import compressed_psum
 
-mesh = jax.make_mesh((4, 2), ("pod", "data"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_auto_mesh((4, 2), ("pod", "data"))
 x = jax.random.normal(jax.random.key(0), (4, 64))
 
 def f(x):
@@ -58,29 +58,32 @@ def f(x):
     exact = jax.lax.psum(x, "pod")
     return comp, exact
 
-g = jax.shard_map(f, mesh=mesh, in_specs=P("pod"),
-                  out_specs=(P("pod"), P("pod")), check_vma=False)
+g = compat.shard_map(f, mesh=mesh, in_specs=P("pod"),
+                     out_specs=(P("pod"), P("pod")), check=False)
 comp, exact = g(x)
 err = float(jnp.max(jnp.abs(comp - exact)))
 scale = float(jnp.max(jnp.abs(exact))) + 1e-9
 assert err / scale < 0.05, (err, scale)
 
-# compressed train step lowers + compiles on a pod mesh
-from repro import configs
-from repro.optim.adamw import OptConfig
-from repro.train import step as sm
-cfg = configs.reduced_config("smollm-135m").replace(n_layers=2)
-mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                      axis_types=(AxisType.Auto,) * 3)
-step = sm.make_train_step_compressed(cfg, OptConfig(), mesh3)
-state = sm.abstract_state(cfg)
-batch = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32),
-         "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32),
-         "mask": jax.ShapeDtypeStruct((8, 32), jnp.float32)}
-compiled = jax.jit(step).lower(state, batch).compile()
-txt = compiled.as_text()
-assert "all-gather" in txt  # the int8 wire path
-assert "s8[" in txt, "int8 payload missing from the compiled module"
+# compressed train step lowers + compiles on a pod mesh. Requires the
+# modern partial-auto shard_map: jax 0.4.x's experimental `auto=` path
+# trips an XLA CHECK (IsManualSubgroup) on this program, so only the
+# numeric psum half runs there.
+if hasattr(jax, "shard_map"):
+    from repro import configs
+    from repro.optim.adamw import OptConfig
+    from repro.train import step as sm
+    cfg = configs.reduced_config("smollm-135m").replace(n_layers=2)
+    mesh3 = make_auto_mesh((2, 2, 2), ("pod", "data", "model"))
+    step = sm.make_train_step_compressed(cfg, OptConfig(), mesh3)
+    state = sm.abstract_state(cfg)
+    batch = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32),
+             "mask": jax.ShapeDtypeStruct((8, 32), jnp.float32)}
+    compiled = jax.jit(step).lower(state, batch).compile()
+    txt = compiled.as_text()
+    assert "all-gather" in txt  # the int8 wire path
+    assert "s8[" in txt, "int8 payload missing from the compiled module"
 print("OK", err / scale)
 """
     env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))

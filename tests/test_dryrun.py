@@ -20,12 +20,11 @@ SCRIPT = r"""
 import os, sys
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax
-from jax.sharding import AxisType
+from repro.compat import make_auto_mesh
 from repro.launch import inputs as inp
 from repro.launch import dryrun
 from repro.roofline import hlo_costs
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(AxisType.Auto, AxisType.Auto))
+mesh = make_auto_mesh((4, 2), ("data", "model"))
 arch, shape = sys.argv[1], sys.argv[2]
 ov = {"n_layers": 2, "d_model": 256, "n_heads": 4, "n_kv_heads": 2,
       "d_ff": 512, "vocab": 4096}

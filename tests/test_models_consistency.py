@@ -6,8 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypcompat import given, settings, st
 
 from repro.models import ssm, xlstm
 from repro.models.common import ModelConfig, init_tree, spec_with_dtype

@@ -1,0 +1,166 @@
+"""Root parallelism: merge correctness, sync exactness, member invariants."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hex as hx
+from repro.core import scheduler
+from repro.core.gscpm import GSCPMConfig
+from repro.core.root_parallel import (
+    check_forest_invariants,
+    ensemble_best_move,
+    gscpm_search_batch,
+    majority_vote_move,
+    merged_root_stats,
+)
+from repro.core.tree import (
+    best_child,
+    forest_member,
+    forest_size,
+    init_forest,
+    root_move_stats,
+)
+
+SIZE = 5
+N_MOVES = SIZE * SIZE
+
+
+def cfg(**kw):
+    base = dict(board_size=SIZE, n_playouts=192, n_tasks=8, n_workers=4,
+                tree_cap=4096, select_noise=1e-3)
+    base.update(kw)
+    return GSCPMConfig(**base)
+
+
+def crossing_position():
+    """Black column c=2 and white row r=2, both missing only (2,2): whoever
+    takes cell 12 wins instantly (same forced position as tests/test_gscpm)."""
+    b = hx.empty_board(hx.HexSpec(SIZE))
+    for r in (0, 1, 3, 4):
+        b = b.at[r * SIZE + 2].set(1)
+    for c in (0, 1, 3, 4):
+        b = b.at[2 * SIZE + c].set(2)
+    return b, 2 * SIZE + 2
+
+
+@pytest.fixture(scope="module")
+def searched_forest():
+    board = hx.empty_board(hx.HexSpec(SIZE))
+    forest, stats = gscpm_search_batch(board, 1, cfg(), jax.random.PRNGKey(0),
+                                       n_trees=3)
+    return forest, stats
+
+
+# --------------------------------------------------------------- merging ----
+def test_merged_visits_equal_member_sum(searched_forest):
+    """Merged per-move root visits == Σ over ensemble members."""
+    forest, stats = searched_forest
+    merged_v, merged_w = merged_root_stats(forest, N_MOVES)
+    acc_v = np.zeros(N_MOVES, np.float64)
+    acc_w = np.zeros(N_MOVES, np.float64)
+    for e in range(forest_size(forest)):
+        v, w = root_move_stats(forest_member(forest, e), N_MOVES)
+        acc_v += np.asarray(v)
+        acc_w += np.asarray(w)
+    np.testing.assert_allclose(np.asarray(merged_v), acc_v, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(merged_w), acc_w, rtol=1e-6)
+    # every playout passes through exactly one root child
+    assert float(np.asarray(merged_v).sum()) == stats["playouts"]
+
+
+def test_member_invariants_and_independence(searched_forest):
+    """check_invariants holds per member; members explore differently."""
+    forest, _ = searched_forest
+    check_forest_invariants(forest)
+    v0 = np.asarray(forest_member(forest, 0).visits[:256])
+    v1 = np.asarray(forest_member(forest, 1).visits[:256])
+    assert not np.array_equal(v0, v1)  # per-member RNG streams decorrelate
+
+
+def test_majority_vote_matches_visit_sum_on_forced_win():
+    """On a sharply forced position every member finds the winning move, so
+    the vote mode and the argmax of summed visits must agree on it."""
+    b, win_move = crossing_position()
+    forest, stats = gscpm_search_batch(
+        b, 1, cfg(n_playouts=512, n_workers=8, n_tasks=16),
+        jax.random.PRNGKey(1), n_trees=4)
+    assert stats["best_move_sum"] == win_move
+    assert stats["best_move_vote"] == win_move
+    assert int(ensemble_best_move(forest, N_MOVES)) == \
+        int(majority_vote_move(forest, N_MOVES))
+
+
+def test_multi_position_batch():
+    """One tree per DISTINCT position: each member searches its own board."""
+    spec = hx.HexSpec(SIZE)
+    b_forced, win_move = crossing_position()
+    boards = jnp.stack([hx.empty_board(spec), b_forced])
+    forest, stats = gscpm_search_batch(
+        boards, 1, cfg(n_playouts=384, n_workers=8), jax.random.PRNGKey(2))
+    check_forest_invariants(forest)
+    assert stats["member_best_moves"][1] == win_move
+    # forced-board member: winning child's value estimate is exactly 1.0
+    t1 = forest_member(forest, 1)
+    assert int(best_child(t1)) == win_move
+
+
+# ---------------------------------------------------------- periodic sync ----
+def test_periodic_sync_exact_no_double_count():
+    """Delta-tracked sync: after the final sync, every member's root visits
+    equal the TOTAL ensemble playouts — repeated merges never double-count."""
+    board = hx.empty_board(hx.HexSpec(SIZE))
+    c = cfg(n_playouts=256, n_tasks=16, n_workers=4)
+    forest, stats = gscpm_search_batch(board, 1, c, jax.random.PRNGKey(3),
+                                       n_trees=3, merge_every=1)
+    assert stats["n_syncs"] >= 2  # merged repeatedly, not just once at the end
+    root_visits = np.asarray(forest.visits[:, 0])
+    np.testing.assert_allclose(root_visits, float(stats["playouts"]))
+    check_forest_invariants(forest)
+
+
+def test_periodic_sync_keeps_forced_win():
+    b, win_move = crossing_position()
+    _, stats = gscpm_search_batch(
+        b, 1, cfg(n_playouts=512, n_workers=8, n_tasks=16),
+        jax.random.PRNGKey(4), n_trees=3, merge_every=2)
+    assert stats["best_move_sum"] == win_move
+
+
+# ----------------------------------------------------------------- forest ----
+def test_init_forest_shapes_and_cap():
+    forest = init_forest(4, 64, N_MOVES, jnp.asarray([1, 2, 1, 2]))
+    assert forest.cap == 64                       # per-member, not ensemble
+    assert forest.max_children == N_MOVES
+    assert forest_size(forest) == 4
+    assert np.asarray(forest.to_move[:, 0]).tolist() == [1, 2, 1, 2]
+    t2 = forest_member(forest, 1)
+    assert t2.cap == 64 and int(t2.n_nodes) == 1
+
+
+def test_single_vs_batch_same_playout_budget():
+    board = hx.empty_board(hx.HexSpec(SIZE))
+    c = cfg(n_playouts=128)
+    forest, stats = gscpm_search_batch(board, 1, c, jax.random.PRNGKey(5),
+                                       n_trees=2)
+    assert stats["playouts_per_tree"] == 128
+    assert stats["playouts"] == 256
+    np.testing.assert_allclose(np.asarray(forest.visits[:, 0]), 128.0)
+
+
+# -------------------------------------------------- scheduler utilization ----
+def test_rebalance_utilization_beats_fifo():
+    """Regression: the stealing analogue must keep lanes busier than static
+    FIFO whenever W does not divide nTasks (the paper's Table I effect)."""
+    fifo = scheduler.schedule_stats(
+        scheduler.make_schedule(640, n_tasks=10, n_workers=4, policy="fifo"))
+    reb = scheduler.schedule_stats(
+        scheduler.make_schedule(640, n_tasks=10, n_workers=4,
+                                policy="rebalance"))
+    assert fifo["lane_iterations"] == reb["lane_iterations"] == 640
+    assert reb["utilization"] > fifo["utilization"]
+    assert reb["utilization"] == 1.0
+    assert fifo["utilization"] == pytest.approx(640 / 768)

@@ -9,9 +9,10 @@ import pytest
 
 from repro import configs
 from repro.models import api
-from repro.serve.engine import Request, SlotEngine
+from repro.serve.engine import MCTSSlotEngine, Request, SlotEngine
 from repro.serve.mcts_decode import (MCTSDecodeConfig, backup_values,
-                                     mcts_decode_search)
+                                     mcts_decode_search,
+                                     mcts_decode_search_batch)
 
 
 @pytest.fixture(scope="module")
@@ -88,6 +89,85 @@ def test_mcts_decode_grain_invariance(small_lm):
         assert stats["playouts"] == 24
         sizes.append(stats["tree_nodes"])
     assert all(s > 1 for s in sizes)
+
+
+def test_mcts_decode_batch_mixed_lengths(small_lm):
+    """B=3 requests (mixed prompt lengths, one masked) through ONE shared
+    jitted step per round: per-request trees grow independently; the masked
+    slot's tree stays empty."""
+    from repro.core.root_parallel import check_forest_invariants
+
+    cfg, params = small_lm
+    dcfg = MCTSDecodeConfig(n_playouts=24, n_tasks=6, n_workers=4, branch=4,
+                            max_depth=3, rollout_len=3, tree_cap=128)
+    prompts = np.zeros((3, 6), np.int32)
+    prompts[0, :6] = np.arange(1, 7)
+    prompts[1, :4] = np.arange(2, 6)
+    prompts[2, :5] = 7
+    forest, stats = mcts_decode_search_batch(
+        params, cfg, jnp.asarray(prompts), dcfg, jax.random.key(2),
+        prompt_lens=jnp.asarray([6, 4, 5], jnp.int32),
+        request_mask=jnp.asarray([True, True, False]))
+    assert stats["n_active_requests"] == 2
+    assert stats["playouts"] == 2 * 24
+    # active requests searched; masked request untouched
+    assert all(n > 1 for n in stats["tree_nodes"][:2])
+    assert stats["tree_nodes"][2] == 1 and stats["best_tokens"][2] == -1
+    assert all(0 <= t < cfg.vocab for t in stats["best_tokens"][:2])
+    assert all(0 < c <= dcfg.branch for c in stats["root_children"][:2])
+    # per-request root visits == that request's playout budget
+    np.testing.assert_allclose(np.asarray(forest.visits[:2, 0]), 24.0)
+    check_forest_invariants(jax.tree.map(lambda x: x[:2], forest))
+
+
+def test_mcts_decode_prompt_len_traced_no_recompile(small_lm):
+    """Two batches with different prompt lengths but identical shapes must
+    reuse the same compiled search program (prompt_len is traced)."""
+    from repro.serve import mcts_decode as md
+
+    cfg, params = small_lm
+    dcfg = MCTSDecodeConfig(n_playouts=8, n_tasks=2, n_workers=2, branch=3,
+                            max_depth=2, rollout_len=2, tree_cap=64)
+    prompts = np.ones((2, 8), np.int32)
+    mcts_decode_search_batch(params, cfg, jnp.asarray(prompts), dcfg,
+                             jax.random.key(0),
+                             prompt_lens=jnp.asarray([8, 8], jnp.int32))
+    before = md.run_chunk_batch._cache_size()
+    mcts_decode_search_batch(params, cfg, jnp.asarray(prompts), dcfg,
+                             jax.random.key(0),
+                             prompt_lens=jnp.asarray([5, 3], jnp.int32))
+    assert md.run_chunk_batch._cache_size() == before
+
+
+def test_mcts_slot_engine_serves_queue(small_lm):
+    """More requests than slots: all finish, outputs land in request order
+    of admission, and the fixed token buffer never recompiles the search."""
+    cfg, params = small_lm
+    dcfg = MCTSDecodeConfig(n_playouts=8, n_tasks=2, n_workers=2, branch=3,
+                            max_depth=2, rollout_len=2, tree_cap=64)
+    eng = MCTSSlotEngine(params, cfg, dcfg, n_slots=2, max_prompt_len=12,
+                         eos_id=-1)
+    rng = np.random.default_rng(0)
+    for rid in range(3):
+        eng.submit(Request(rid=rid,
+                           prompt=rng.integers(1, cfg.vocab, size=(4,),
+                                               dtype=np.int64).astype(np.int32),
+                           max_new=2))
+    done = eng.run()
+    assert len(done) == 3
+    assert all(len(r.out) == 2 for r in done)
+    assert all(0 <= t < cfg.vocab for r in done for t in r.out)
+    # 2 slots, 3 requests, 2 tokens each -> 4 lockstep ticks
+    assert len(eng.search_stats) == 4
+
+
+def test_mcts_slot_engine_rejects_oversized_prompt(small_lm):
+    cfg, params = small_lm
+    dcfg = MCTSDecodeConfig(n_workers=2, branch=3, max_depth=2, rollout_len=2)
+    eng = MCTSSlotEngine(params, cfg, dcfg, n_slots=1, max_prompt_len=8)
+    with pytest.raises(ValueError):
+        eng.submit(Request(rid=0, prompt=np.arange(1, 8, dtype=np.int32),
+                           max_new=4))
 
 
 def test_backup_values():
