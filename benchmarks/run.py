@@ -23,7 +23,7 @@ def main():
 
     from benchmarks import (ablate_vloss, fig5_cilkview, fig7_speedup,
                             fig9_mapping, kernels_micro, roofline_table,
-                            root_parallel, table2_sequential)
+                            root_parallel, table2_sequential, tpfifo)
     from benchmarks.common import save_result
 
     n_po = 8192 if args.full else 1024
@@ -39,6 +39,7 @@ def main():
         "ablate_vloss": lambda: ablate_vloss.run(n_playouts=n_po),
         "roofline_table": lambda: roofline_table.run(),
         "root_parallel": lambda: root_parallel.run(n_playouts=n_po),
+        "tpfifo": lambda: tpfifo.run(n_requests=48 if args.full else 24),
     }
     if args.only:
         keep = {k.strip() for k in args.only.split(",")}
@@ -89,6 +90,12 @@ def _summ(name: str, res: dict) -> dict:
         return {r: {"tree_nodes": v["tree_nodes"],
                     "playouts_per_s": round(v["playouts_per_s"])}
                 for r, v in res["results"].items()}
+    if name == "tpfifo":
+        return {"lockstep_tok_s": round(res["lockstep"]["throughput_tok_s"]),
+                "speedups": {m: round(r["speedup_vs_lockstep"], 2)
+                             for m, r in res["tpfifo"].items()},
+                "best": round(res["best_speedup"], 2),
+                "pass": res["acceptance"]["pass"]}
     if name == "roofline_table":
         return {"n_ok": res["n_ok"], "n_cells": res["n_cells"]}
     return {}

@@ -8,6 +8,9 @@ playout budget at different nTasks.
 Part 3 serves MULTIPLE search-guided requests at once: the MCTS slot
 engine gives every request its own token tree and advances all of them
 through one shared jitted step (root parallelism, DESIGN.md §3).
+Part 4 swaps the lockstep pool for the TPFIFO work-sharing queue
+(DESIGN.md §10): grain-sized quanta, chunked prefill, preemption, and
+per-request queue telemetry.
 
     PYTHONPATH=src python examples/serve_mcts.py
 """
@@ -73,6 +76,31 @@ def main():
     print(f"MCTS slot engine: {len(done)} requests, {tok} searched tokens "
           f"in {searches} lockstep ticks, {tok/dt:.1f} tok/s "
           f"(3 slots, 3 trees, one jitted search step)")
+
+    # ---- part 4: TPFIFO work-sharing queue (DESIGN.md §10) ------------
+    # the paper's thread pool as a serving scheduler: grain-sized quanta,
+    # chunked prefill (the 28-token prompt never blocks the short ones),
+    # preemption+requeue after 4 quanta, p50/p95 queue telemetry
+    from repro.serve.tpfifo import TPFIFOEngine
+
+    qeng = TPFIFOEngine(params, cfg, n_slots=4, max_len=64, grain=8,
+                        policy="fifo", preempt_quanta=4)
+    qeng.submit(Request(rid=0, prompt=rng.integers(
+        1, cfg.vocab, size=(28,)).astype(np.int32), max_new=8))
+    for rid in range(1, 8):
+        plen = int(rng.integers(4, 10))
+        qeng.submit(Request(rid=rid, prompt=rng.integers(
+            1, cfg.vocab, size=(plen,)).astype(np.int32), max_new=12))
+    t0 = time.perf_counter()
+    done = qeng.run()
+    dt = time.perf_counter() - t0
+    st = qeng.stats()
+    tok = sum(len(r.out) for r in done)
+    print(f"TPFIFO engine: {len(done)} requests, {tok} tokens in "
+          f"{qeng._ticks} quanta of m=8, {tok/dt:.1f} tok/s; queue wait "
+          f"p50/p95 {st.queue_wait_p50*1e3:.0f}/{st.queue_wait_p95*1e3:.0f} "
+          f"ms, latency p95 {st.latency_p95*1e3:.0f} ms, "
+          f"{st.n_preemptions} preemptions")
 
 
 if __name__ == "__main__":

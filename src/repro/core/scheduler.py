@@ -77,6 +77,34 @@ def make_schedule(n_playouts: int, n_tasks: int, n_workers: int,
     raise ValueError(f"unknown scheduler policy: {policy!r}")
 
 
+def quantum_plan(n_steps: int, grain: int, policy: str) -> list[int]:
+    """One request's work split into grain-sized quanta (TPFIFO serving).
+
+    The serving layer (`repro.serve.tpfifo`) treats each admitted request as
+    the paper's "logical task of fungible iterations": ``n_steps`` micro-steps
+    (decode ticks or MCTS commit rounds) dispatched as a sequence of quanta.
+    The split reuses ``make_schedule`` with a single lane — the request itself
+    is the worker — so the serving disciplines are literally the paper's:
+
+    - ``fifo`` / ``rebalance``  uniform quanta of ~``grain`` steps; the
+                                request yields the device at every boundary.
+    - ``one_per_core``          one monolithic quantum (run-to-completion):
+                                the paper's one-task-per-lane baseline.
+    - ``sequential``            alias of ``one_per_core`` at W=1.
+
+    ``make_schedule`` floors its budget to ``n_tasks * m``; a request is not
+    fungible, so the last quantum is topped up to cover ``n_steps`` exactly.
+    """
+    n_steps = max(1, n_steps)
+    n_tasks = max(1, math.ceil(n_steps / max(1, grain)))
+    rounds = make_schedule(n_steps, n_tasks, 1, policy)
+    plan = [r.m for r in rounds if bool(r.active.any())]
+    short = n_steps - sum(plan)
+    if short > 0:
+        plan[-1] += short
+    return plan
+
+
 def schedule_stats(schedule: list[Round]) -> dict:
     """Lane-utilization accounting for a schedule (used by benchmarks)."""
     lane_iters = sum(int(r.active.sum()) * r.m for r in schedule)

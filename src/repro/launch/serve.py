@@ -1,9 +1,10 @@
 """Serving launcher: continuous-batched decode + optional GSCPM decoding.
 
-``python -m repro.launch.serve --arch smollm-135m --requests 8`` runs the
-slot engine over synthetic prompts; ``--mcts`` decodes each prompt's next
-tokens with Grain-Size Controlled MCTS instead of greedy sampling (the
-paper's technique in the serving path).
+``python -m repro.launch.serve --arch smollm-135m --requests 8`` serves
+synthetic prompts; ``--scheduler tpfifo`` swaps the lockstep slot engine for
+the work-sharing TPFIFO queue (grain-size-controlled continuous batching,
+DESIGN.md §10) and ``--mcts`` decodes with Grain-Size Controlled MCTS
+instead of greedy sampling (the paper's technique in the serving path).
 """
 
 from __future__ import annotations
@@ -12,13 +13,13 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
 from repro.models import api
-from repro.serve.engine import Request, SlotEngine
-from repro.serve.mcts_decode import MCTSDecodeConfig, mcts_generate
+from repro.serve.engine import MCTSSlotEngine, Request, SlotEngine
+from repro.serve.mcts_decode import MCTSDecodeConfig
+from repro.serve.tpfifo import TPFIFOEngine, TPFIFOMCTSEngine
 
 
 def main():
@@ -29,7 +30,20 @@ def main():
     p.add_argument("--prompt-len", type=int, default=16)
     p.add_argument("--max-new", type=int, default=16)
     p.add_argument("--temperature", type=float, default=0.0)
-    p.add_argument("--mcts", action="store_true")
+    p.add_argument("--scheduler", default="lockstep",
+                   choices=["lockstep", "tpfifo"],
+                   help="lockstep: one decode step per tick; tpfifo: "
+                        "work-sharing FIFO queue dispatching grain-sized "
+                        "quanta (chunked prefill + continuous batching)")
+    p.add_argument("--grain", type=int, default=8,
+                   help="micro-steps per TPFIFO dispatch quantum")
+    p.add_argument("--policy", default="fifo",
+                   choices=["fifo", "rebalance", "one_per_core"],
+                   help="TPFIFO admission/requeue discipline")
+    p.add_argument("--preempt-quanta", type=int, default=None,
+                   help="preempt+requeue a request after this many quanta")
+    p.add_argument("--mcts", action="store_true",
+                   help="decode with GSCPM search instead of greedy")
     p.add_argument("--playouts", type=int, default=64)
     p.add_argument("--tasks", type=int, default=16)
     p.add_argument("--workers", type=int, default=4)
@@ -41,23 +55,29 @@ def main():
     rng = np.random.default_rng(args.seed)
 
     if args.mcts:
-        prompt = jnp.asarray(
-            rng.integers(1, cfg.vocab, size=(args.prompt_len,)), jnp.int32)
         dcfg = MCTSDecodeConfig(n_playouts=args.playouts, n_tasks=args.tasks,
                                 n_workers=args.workers)
-        t0 = time.perf_counter()
-        toks, stats = mcts_generate(params, cfg, prompt, args.max_new, dcfg,
-                                    jax.random.key(args.seed + 1))
-        dt = time.perf_counter() - t0
-        print(f"GSCPM decode: {args.max_new} tokens in {dt:.1f}s "
-              f"({sum(s['playouts'] for s in stats)} playouts, grain "
-              f"{dcfg.grain})")
-        print("tokens:", toks.tolist())
-        return
+        max_plen = args.prompt_len + args.max_new
+        if args.scheduler == "tpfifo":
+            eng = TPFIFOMCTSEngine(params, cfg, dcfg, n_slots=args.slots,
+                                   max_prompt_len=max_plen, grain=args.grain,
+                                   policy=args.policy,
+                                   preempt_quanta=args.preempt_quanta,
+                                   seed=args.seed)
+        else:
+            eng = MCTSSlotEngine(params, cfg, dcfg, n_slots=args.slots,
+                                 max_prompt_len=max_plen, seed=args.seed)
+    elif args.scheduler == "tpfifo":
+        eng = TPFIFOEngine(params, cfg, n_slots=args.slots,
+                           max_len=args.prompt_len + args.max_new + 8,
+                           grain=args.grain, policy=args.policy,
+                           preempt_quanta=args.preempt_quanta,
+                           temperature=args.temperature, seed=args.seed)
+    else:
+        eng = SlotEngine(params, cfg, n_slots=args.slots,
+                         max_len=args.prompt_len + args.max_new + 8,
+                         temperature=args.temperature, seed=args.seed)
 
-    eng = SlotEngine(params, cfg, n_slots=args.slots,
-                     max_len=args.prompt_len + args.max_new + 8,
-                     temperature=args.temperature, seed=args.seed)
     for rid in range(args.requests):
         plen = int(rng.integers(4, args.prompt_len + 1))
         eng.submit(Request(rid=rid,
@@ -68,8 +88,16 @@ def main():
     done = eng.run()
     dt = time.perf_counter() - t0
     tok = sum(len(r.out) for r in done)
-    print(f"served {len(done)} requests, {tok} tokens in {dt:.1f}s "
+    mode = ("GSCPM " if args.mcts else "") + args.scheduler
+    print(f"[{mode}] served {len(done)} requests, {tok} tokens in {dt:.1f}s "
           f"({tok/dt:.1f} tok/s, {args.slots} slots)")
+    st = eng.stats()
+    line = (f"  queue wait p50/p95 {st.queue_wait_p50*1e3:.0f}/"
+            f"{st.queue_wait_p95*1e3:.0f} ms, latency p50/p95 "
+            f"{st.latency_p50*1e3:.0f}/{st.latency_p95*1e3:.0f} ms")
+    if args.scheduler == "tpfifo":    # lockstep engines have no quanta
+        line += f", {st.quanta} quanta, {st.n_preemptions} preemptions"
+    print(line)
 
 
 if __name__ == "__main__":

@@ -14,13 +14,21 @@ engine tick runs ONE root-parallel batched search
 single jitted step per round) and commits one searched token per active
 slot. Empty slots ride along as masked requests, so arrival patterns never
 change shapes and the whole serve lifetime uses one compiled search program.
+
+Both engines are *lockstep policies* (one micro-step per tick, admission
+only into free slots, no preemption) over the work-sharing FIFO driver in
+``repro.serve.tpfifo`` (DESIGN.md §10), which owns the queue discipline,
+admission bookkeeping, and per-request telemetry (``QueueStats``). The
+grain-size-controlled engines — ``TPFIFOEngine`` / ``TPFIFOMCTSEngine`` —
+live there too.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Any, Callable
+import functools
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +36,7 @@ import numpy as np
 
 from repro.models import api
 from repro.models.common import ModelConfig
+from repro.serve.tpfifo import TPFIFODriver, Ticket, sample_tokens  # noqa: F401  (sample_tokens re-exported: public API of this module since PR 1)
 
 
 def make_prefill_step(cfg: ModelConfig, max_len: int) -> Callable:
@@ -52,13 +61,16 @@ def make_serve_step(cfg: ModelConfig) -> Callable:
     return serve_step
 
 
-def sample_tokens(logits: jnp.ndarray, key: jax.Array,
-                  temperature: float = 0.0) -> jnp.ndarray:
-    """(B, 1, V) -> (B, 1) greedy (t=0) or temperature sampling."""
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(
-        key, logits.astype(jnp.float32) / temperature, axis=-1).astype(jnp.int32)
+@functools.lru_cache(maxsize=64)
+def _shared_prefill(cfg: ModelConfig, max_len: int) -> Callable:
+    """Process-wide jitted prefill: engines come and go (one per benchmark
+    trace, one per test), the compile cache must not die with them."""
+    return jax.jit(make_prefill_step(cfg, max_len))
+
+
+@functools.lru_cache(maxsize=64)
+def _shared_decode(cfg: ModelConfig) -> Callable:
+    return jax.jit(make_serve_step(cfg), donate_argnums=(3,))
 
 
 @dataclasses.dataclass
@@ -70,19 +82,7 @@ class Request:
     done: bool = False
 
 
-class _RunLoop:
-    """Shared drain loop: tick until the queue and all slots are empty."""
-
-    def run(self, max_ticks: int = 10_000) -> list[Request]:
-        ticks = 0
-        while (self.queue or any(r is not None for r in self.active)) \
-                and ticks < max_ticks:
-            self.step()
-            ticks += 1
-        return self.finished
-
-
-class SlotEngine(_RunLoop):
+class SlotEngine(TPFIFODriver):
     """Fixed-B continuous batcher over the jitted prefill/decode steps.
 
     Per-slot prefill writes the prompt's KV into the slot's rows of the
@@ -94,9 +94,9 @@ class SlotEngine(_RunLoop):
 
     def __init__(self, params, cfg: ModelConfig, n_slots: int, max_len: int,
                  temperature: float = 0.0, eos_id: int = 2, seed: int = 0):
+        super().__init__(n_slots)
         self.params = params
         self.cfg = cfg
-        self.B = n_slots
         self.max_len = max_len
         self.temperature = temperature
         self.eos_id = eos_id
@@ -108,46 +108,66 @@ class SlotEngine(_RunLoop):
         self._batch_axes = jax.tree.leaves(
             api.cache_batch_axes(cfg, n_slots, max_len))
         self.pos = np.zeros((n_slots,), np.int32)       # next write position
-        self.active: list[Request | None] = [None] * n_slots
-        self.queue: list[Request] = []
-        self.finished: list[Request] = []
+        self._pending_admits: list[tuple[int, Ticket]] = []
 
-        # jit once; batch=1 prefill per admitted request
-        self._prefill1 = jax.jit(make_prefill_step(cfg, max_len))
-        self._decode = jax.jit(make_serve_step(cfg), donate_argnums=(3,))
+        # jitted once per (cfg, max_len) across ALL engine instances;
+        # batch=1 prefill per admitted request
+        self._prefill1 = _shared_prefill(cfg, max_len)
+        self._decode = _shared_decode(cfg)
         self._pending_tok = np.zeros((n_slots, 1), np.int32)
 
-    # ------------------------------------------------------------- admit ----
-    def submit(self, req: Request):
-        self.queue.append(req)
+    def submit(self, req: Request, at: float | None = None):
+        if len(req.prompt) > self.max_len:
+            raise ValueError(
+                f"prompt ({len(req.prompt)}) exceeds the cache "
+                f"(max_len {self.max_len}); generation past the cache is "
+                f"merely truncated, but an oversized prompt cannot prefill")
+        super().submit(req, at=at)
 
-    def _admit(self):
-        for s in range(self.B):
-            if self.active[s] is None and self.queue:
-                req = self.queue.pop(0)
-                toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-                logits, cache1 = self._prefill1(self.params, {"tokens": toks})
-                # copy the single-request cache into slot s (per-leaf batch axis)
-                big_leaves, treedef = jax.tree.flatten(self.cache)
-                one_leaves = jax.tree.leaves(cache1)
-                out = []
-                for big, one, bi in zip(big_leaves, one_leaves,
-                                        self._batch_axes):
-                    idx = (slice(None),) * bi
-                    out.append(big.at[idx + (s,)].set(one[idx + (0,)]))
-                self.cache = jax.tree.unflatten(treedef, out)
-                self.key, k = jax.random.split(self.key)
-                tok = sample_tokens(logits, k, self.temperature)
-                req.out.append(int(tok[0, 0]))
-                self._pending_tok[s] = np.asarray(tok[0])
-                self.pos[s] = len(req.prompt)
-                self.active[s] = req
+    def _should_retire(self, tok: int, req: Request, pos: int) -> bool:
+        """Shared by the admission and decode paths — the two must agree."""
+        return (tok == self.eos_id or len(req.out) >= req.max_new
+                or pos >= self.max_len - 1)
+
+    # ------------------------------------------------------------- admit ----
+    def _load_slot(self, s: int, t: Ticket):
+        # defer device work: all of a tick's admissions share one
+        # flatten/unflatten of the big cache pytree (see _apply_admits)
+        self._pending_admits.append((s, t))
+
+    def _apply_admits(self):
+        big_leaves, treedef = jax.tree.flatten(self.cache)
+        for s, t in self._pending_admits:
+            req = t.req
+            toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, cache1 = self._prefill1(self.params, {"tokens": toks})
+            # copy the single-request cache into slot s (per-leaf batch axis)
+            one_leaves = jax.tree.leaves(cache1)
+            for i, (big, one, bi) in enumerate(
+                    zip(big_leaves, one_leaves, self._batch_axes)):
+                idx = (slice(None),) * bi
+                big_leaves[i] = big.at[idx + (s,)].set(one[idx + (0,)])
+            self.key, k = jax.random.split(self.key)
+            tok = sample_tokens(logits, k, self.temperature)
+            tok_i = int(tok[0, 0])
+            req.out.append(tok_i)
+            self._pending_tok[s] = np.asarray(tok[0])
+            self.pos[s] = len(req.prompt)
+            # the admission token can already satisfy the request (eos, a
+            # max_new=1 budget, or a full cache): retire now, or the next
+            # decode tick would overrun the budget
+            if self._should_retire(tok_i, req, int(self.pos[s])):
+                self._retire_slot(s)
+        self.cache = jax.tree.unflatten(treedef, big_leaves)
+        self._pending_admits = []
 
     # -------------------------------------------------------------- step ----
     def step(self) -> int:
         """One engine tick: admit, decode all active slots, retire finished."""
-        self._admit()
-        if not any(r is not None for r in self.active):
+        self._admit_free_slots()
+        if self._pending_admits:
+            self._apply_admits()
+        if not any(t is not None for t in self.active):
             return 0
         tokens = jnp.asarray(self._pending_tok)
         pos = jnp.asarray(self.pos)
@@ -155,23 +175,21 @@ class SlotEngine(_RunLoop):
         self.key, k = jax.random.split(self.key)
         nxt = np.asarray(sample_tokens(logits, k, self.temperature))
         n_active = 0
-        for s, req in enumerate(self.active):
-            if req is None:
+        for s, t in enumerate(self.active):
+            if t is None:
                 continue
             n_active += 1
+            req = t.req
             tok = int(nxt[s, 0])
             req.out.append(tok)
             self.pos[s] += 1
             self._pending_tok[s] = tok
-            if (tok == self.eos_id or len(req.out) >= req.max_new
-                    or self.pos[s] >= self.max_len - 1):
-                req.done = True
-                self.finished.append(req)
-                self.active[s] = None
+            if self._should_retire(tok, req, int(self.pos[s])):
+                self._retire_slot(s)
         return n_active
 
 
-class MCTSSlotEngine(_RunLoop):
+class MCTSSlotEngine(TPFIFODriver):
     """Multi-user MCTS-decode server: B slots, B trees, one jitted step.
 
     Each tick = admit waiting requests into free slots, run one batched
@@ -188,47 +206,41 @@ class MCTSSlotEngine(_RunLoop):
 
     def __init__(self, params, cfg: ModelConfig, dcfg, n_slots: int,
                  max_prompt_len: int, eos_id: int = 2, seed: int = 0):
+        super().__init__(n_slots)
         self.params = params
         self.cfg = cfg
         self.dcfg = dcfg
-        self.B = n_slots
         self.max_prompt_len = max_prompt_len
         self.eos_id = eos_id
         self.key = jax.random.key(seed)
 
         self.tokens = np.zeros((n_slots, max_prompt_len), np.int32)
         self.lens = np.ones((n_slots,), np.int32)   # >=1: masked slots still
-        self.active: list[Request | None] = [None] * n_slots  # index pos len-1
-        self.queue: list[Request] = []
-        self.finished: list[Request] = []
         # bounded tick history: a long-lived server must not grow host
         # memory with one dict per committed token
         self.search_stats: collections.deque = collections.deque(maxlen=256)
 
-    def submit(self, req: Request):
+    def submit(self, req: Request, at: float | None = None):
         if len(req.prompt) + req.max_new > self.max_prompt_len:
             raise ValueError(
                 f"prompt ({len(req.prompt)}) + max_new ({req.max_new}) "
                 f"exceeds max_prompt_len ({self.max_prompt_len})")
-        self.queue.append(req)
+        super().submit(req, at=at)
 
-    def _admit(self):
-        for s in range(self.B):
-            if self.active[s] is None and self.queue:
-                req = self.queue.pop(0)
-                L = len(req.prompt)
-                self.tokens[s, :] = 0
-                self.tokens[s, :L] = np.asarray(req.prompt, np.int32)
-                self.lens[s] = L
-                self.active[s] = req
+    def _load_slot(self, s: int, t: Ticket):
+        req = t.req
+        L = len(req.prompt)
+        self.tokens[s, :] = 0
+        self.tokens[s, :L] = np.asarray(req.prompt, np.int32)
+        self.lens[s] = L
 
     def step(self) -> int:
         """One tick: admit, search all slots in lockstep, commit one token
         per active slot, retire finished. Returns #active slots served."""
         from repro.serve.mcts_decode import mcts_decode_search_batch
 
-        self._admit()
-        mask = np.array([r is not None for r in self.active])
+        self._admit_free_slots()
+        mask = np.array([t is not None for t in self.active])
         if not mask.any():
             return 0
         self.key, k = jax.random.split(self.key)
@@ -237,16 +249,15 @@ class MCTSSlotEngine(_RunLoop):
             prompt_lens=jnp.asarray(self.lens),
             request_mask=jnp.asarray(mask))
         self.search_stats.append(stats)
-        for s, req in enumerate(self.active):
-            if req is None:
+        for s, t in enumerate(self.active):
+            if t is None:
                 continue
+            req = t.req
             tok = int(stats["best_tokens"][s])
             req.out.append(tok)
             self.tokens[s, self.lens[s]] = tok
             self.lens[s] += 1
             if (tok == self.eos_id or len(req.out) >= req.max_new
                     or self.lens[s] >= self.max_prompt_len):
-                req.done = True
-                self.finished.append(req)
-                self.active[s] = None
+                self._retire_slot(s)
         return int(mask.sum())

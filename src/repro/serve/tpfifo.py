@@ -1,0 +1,631 @@
+"""TPFIFO serving: a work-sharing FIFO request scheduler over device slots.
+
+The paper's headline result is that a plain FIFO work-sharing thread pool
+(TPFIFO) with controlled task grain out-scales work-stealing runtimes for
+irregular MCTS workloads. This module ports that scheduler to the serving
+layer (DESIGN.md §10): the *queue* holds requests, the *workers* are the B
+fixed device slots of the batched engines, and the *task grain* is ``m``
+micro-steps (decode ticks, or MCTS commit rounds) per dispatch.
+
+Three layers:
+
+- ``TPFIFODriver`` — the host-side pool: one FIFO queue of ``Ticket``s, B
+  slots, per-request quantum plans derived from
+  ``repro.core.scheduler.quantum_plan`` (the same disciplines the GSCPM
+  round scheduler uses: ``fifo``/``rebalance`` slice requests into uniform
+  grains, ``one_per_core`` runs each request to completion), preemption and
+  requeue of over-budget requests, and per-request telemetry summarized by
+  ``QueueStats``. `repro.serve.engine`'s lockstep engines subclass it with
+  ``grain=None``; the TPFIFO engines below subclass it with a real grain.
+
+- ``TPFIFOEngine`` — grain-size-controlled continuous batching for LM
+  decode. One jitted quantum (``run_quantum``) advances ALL slots ``m``
+  micro-steps; each micro-step feeds exactly one token per slot through
+  ``api.decode``, so *prefill and decode share one program*: a slot whose
+  cursor is still inside its context consumes the next context token
+  (chunked prefill — a long prompt advances ``m`` positions per quantum and
+  never blocks other slots' decode ticks), a slot past its context appends
+  the token it just sampled. Shapes are fixed by ``(n_slots, max_len)`` and
+  the grain ``m`` is a *traced* scalar, so admissions, retirements,
+  preemptions, and grain changes never recompile — a finishing request's
+  slot is refilled from the queue at the next dispatch within the same
+  compiled step.
+
+- ``TPFIFOMCTSEngine`` — the search-guided sibling: a quantum is ``m``
+  search+commit rounds of ``mcts_decode_search_batch`` (each round is
+  itself one jitted program over all slots), with the same queue,
+  preemption, and telemetry.
+
+Preemption is lossless: a preempted request keeps its generated tokens in
+``Request.out``; on re-admission its context is ``prompt ⊕ out`` and the
+chunked prefill recomputes the KV for the full context, so greedy decoding
+resumes bit-identically.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import math
+import time
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scheduler as sched
+from repro.models import api
+from repro.models.common import ModelConfig
+
+
+# ------------------------------------------------------------------ queue ----
+@dataclasses.dataclass
+class Ticket:
+    """Queue entry wrapping one request, with scheduling state + telemetry.
+
+    ``req`` is duck-typed (``repro.serve.engine.Request``): needs ``rid``,
+    ``prompt``, ``max_new``, ``out``, ``done``.
+    """
+    req: Any
+    t_submit: float
+    t_admit: float | None = None        # first admission
+    t_done: float | None = None
+    quanta: int = 0                     # completed quanta (all segments)
+    quanta_at_admit: int = 0            # snapshot at current admission
+    preemptions: int = 0
+    seg_base: int = 0                   # len(req.out) at current admission
+    plan: list[int] | None = None       # remaining quantum sizes
+    plan_idx: int = 0
+    q_rem: int = 0                      # micro-steps left in current quantum
+
+
+@dataclasses.dataclass(frozen=True)
+class QueueStats:
+    """Aggregate per-request telemetry for one serve run (seconds)."""
+    n_finished: int
+    n_preemptions: int
+    tokens: int
+    quanta: int
+    wall_s: float
+    throughput_tok_s: float
+    queue_wait_p50: float
+    queue_wait_p95: float
+    service_p50: float
+    service_p95: float
+    latency_p50: float
+    latency_p95: float
+
+    @classmethod
+    def from_tickets(cls, tickets: list[Ticket]) -> "QueueStats":
+        done = [t for t in tickets if t.t_done is not None]
+        if not done:
+            return cls(0, 0, 0, 0, 0.0, 0.0, *([0.0] * 6))
+        waits = np.asarray([t.t_admit - t.t_submit for t in done])
+        service = np.asarray([t.t_done - t.t_admit for t in done])
+        latency = np.asarray([t.t_done - t.t_submit for t in done])
+        t0 = min(t.t_submit for t in done)
+        wall = max(t.t_done for t in done) - t0
+        tokens = sum(len(t.req.out) for t in done)
+        p = np.percentile
+        return cls(
+            n_finished=len(done),
+            n_preemptions=sum(t.preemptions for t in done),
+            tokens=tokens,
+            quanta=sum(t.quanta for t in done),
+            wall_s=wall,
+            throughput_tok_s=tokens / max(wall, 1e-9),
+            queue_wait_p50=float(p(waits, 50)),
+            queue_wait_p95=float(p(waits, 95)),
+            service_p50=float(p(service, 50)),
+            service_p95=float(p(service, 95)),
+            latency_p50=float(p(latency, 50)),
+            latency_p95=float(p(latency, 95)),
+        )
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# ----------------------------------------------------------------- driver ----
+class TPFIFODriver:
+    """Host-side work-sharing FIFO pool: one queue, B device-slot workers.
+
+    Subclasses implement ``step()`` (one engine tick) and ``_load_slot``
+    (move an admitted ticket's request into device-slot state). Lockstep
+    engines pass ``grain=None`` (no quantum plans, no preemption); grained
+    engines get per-request plans from ``scheduler.quantum_plan`` and call
+    ``_tick_m()`` for each dispatch's micro-step count.
+    """
+
+    def __init__(self, n_slots: int, grain: int | None = None,
+                 policy: str = "fifo", preempt_quanta: int | None = None):
+        if grain is not None and policy not in (
+                "fifo", "rebalance", "one_per_core", "sequential"):
+            raise ValueError(f"unknown TPFIFO policy: {policy!r}")
+        if grain is not None and grain < 1:
+            raise ValueError(f"grain must be >= 1, got {grain}")
+        self.B = n_slots
+        self.grain = grain
+        self.policy = policy
+        self.preempt_quanta = preempt_quanta
+        self.queue: collections.deque[Ticket] = collections.deque()
+        self.active: list[Ticket | None] = [None] * n_slots
+        self.finished: list[Any] = []            # Request objects (public)
+        self.finished_tickets: list[Ticket] = []
+        self.admission_order: list[Any] = []     # rids, in admission order
+        self._t0 = time.perf_counter()
+        self._ticks = 0
+
+    # -- clock / queue ----------------------------------------------------
+    def _now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def submit(self, req, at: float | None = None):
+        """Enqueue a request; ``at`` overrides the submit timestamp (trace
+        replay records the scheduled arrival, not the injection instant)."""
+        self.queue.append(Ticket(req=req,
+                                 t_submit=self._now() if at is None else at))
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(t is not None for t in self.active)
+
+    # -- slot lifecycle ---------------------------------------------------
+    def _admit_free_slots(self) -> list[int]:
+        """FIFO admission: every free slot takes the head of the queue."""
+        admitted = []
+        for s in range(self.B):
+            if self.active[s] is None and self.queue:
+                t = self.queue.popleft()
+                if t.t_admit is None:
+                    t.t_admit = self._now()
+                t.quanta_at_admit = t.quanta
+                t.seg_base = len(t.req.out)
+                if self.grain is not None:
+                    t.plan = sched.quantum_plan(self._work_estimate(t),
+                                                self.grain, self.policy)
+                    t.plan_idx = 0
+                    t.q_rem = t.plan[0]
+                self.active[s] = t
+                self.admission_order.append(t.req.rid)
+                self._load_slot(s, t)
+                admitted.append(s)
+        return admitted
+
+    def _retire_slot(self, s: int):
+        t = self.active[s]
+        self.active[s] = None
+        t.t_done = self._now()
+        t.req.done = True
+        self.finished.append(t.req)
+        self.finished_tickets.append(t)
+
+    def _preempt_slot(self, s: int):
+        """Requeue an over-budget request at the tail (round-robin sharing);
+        generated tokens stay in ``req.out`` and are re-prefilled on
+        re-admission, so nothing is lost."""
+        t = self.active[s]
+        self.active[s] = None
+        t.preemptions += 1
+        self.queue.append(t)
+
+    def _should_preempt(self, t: Ticket, progressed: bool | None = None) -> bool:
+        # progress guard: a segment is only preemptible once it has
+        # committed a fresh token — otherwise a resumed request whose
+        # context replay outlasts its quantum budget would be requeued
+        # before ever reaching emission and livelock at zero progress
+        if progressed is None:
+            progressed = len(t.req.out) > t.seg_base
+        return (self.preempt_quanta is not None
+                and self.policy not in ("one_per_core", "sequential")
+                and t.quanta - t.quanta_at_admit >= self.preempt_quanta
+                and progressed
+                and bool(self.queue))
+
+    # -- grain accounting -------------------------------------------------
+    def _work_estimate(self, t: Ticket) -> int:
+        """Micro-steps this admission segment needs (engine-specific)."""
+        raise NotImplementedError
+
+    def _tick_m(self) -> int:
+        """Micro-steps for this dispatch.
+
+        ``fifo`` dispatches exactly the configured grain — slots whose plan
+        boundary falls mid-dispatch just account for it (cutting every
+        dispatch to the smallest pending quantum would let staggered
+        arrivals fragment the grain to nothing). ``rebalance`` re-splits
+        idle slots' lane budget over the active ones (larger quanta keep
+        device work per dispatch constant — the serving analogue of the
+        scheduler's no-idle-lanes re-split). ``one_per_core`` dispatches
+        until the LONGEST active request completes: one monolithic task per
+        lane, the paper's baseline — and its head-of-line pathology.
+        """
+        live = [t for t in self.active if t is not None]
+        if self.policy in ("one_per_core", "sequential"):
+            m = max(max(1, t.q_rem) for t in live)
+        elif self.policy == "rebalance" and len(live) < self.B:
+            m = math.ceil(self.grain * self.B / len(live))
+        else:
+            m = self.grain
+        for t in live:
+            t.q_rem -= m
+            while t.q_rem <= 0:
+                t.quanta += 1
+                t.plan_idx += 1
+                t.q_rem += (t.plan[t.plan_idx] if t.plan_idx < len(t.plan)
+                            else self.grain)
+        return m
+
+    # -- engine interface -------------------------------------------------
+    def _load_slot(self, s: int, t: Ticket):
+        raise NotImplementedError
+
+    def step(self) -> int:
+        raise NotImplementedError
+
+    # -- run loops --------------------------------------------------------
+    def run(self, max_ticks: int = 10_000) -> list:
+        """Drain loop: tick until the queue and all slots are empty.
+
+        ``max_ticks`` bounds THIS call (``self._ticks`` keeps the lifetime
+        total for telemetry) so a long-lived engine can run repeatedly.
+        """
+        ticks = 0
+        while self.has_work() and ticks < max_ticks:
+            self.step()
+            self._ticks += 1
+            ticks += 1
+        return self.finished
+
+    def run_trace(self, trace: list[tuple[float, Any]],
+                  max_ticks: int = 1_000_000) -> list:
+        """Replay an arrival trace of ``(arrival_s, request)`` against the
+        wall clock (arrival_s relative to the call instant).
+
+        Arrivals are offset to the current clock rather than re-seating the
+        engine epoch, so timestamps of requests already submitted (and of
+        earlier runs) stay valid in ``stats()``.
+        """
+        base = self._now()
+        pending = collections.deque(
+            sorted(((base + t, req) for t, req in trace), key=lambda p: p[0]))
+        ticks = 0
+        while (pending or self.has_work()) and ticks < max_ticks:
+            now = self._now()
+            while pending and pending[0][0] <= now:
+                at, req = pending.popleft()
+                self.submit(req, at=at)
+            if self.has_work():
+                self.step()
+                self._ticks += 1
+                ticks += 1
+            elif pending:
+                time.sleep(min(pending[0][0] - now, 1e-3))
+        return self.finished
+
+    def stats(self) -> QueueStats:
+        return QueueStats.from_tickets(self.finished_tickets)
+
+
+# ---------------------------------------------------------- jitted quantum ----
+class LaneState(NamedTuple):
+    """Per-slot device state for the unified prefill/decode micro-step.
+
+    tokens: (B, L) i32 context ⊕ generated; pos: (B,) next KV write
+    position; in_tok: (B,) token to feed at pos; ctx_len: (B,) context
+    length (prompt ⊕ resumed tokens); gen: (B,) tokens generated this
+    segment; budget: (B,) segment generation budget; live: (B,) slot is
+    occupied and unfinished (dead lanes are frozen, not skipped — the batch
+    shape never changes).
+    """
+    tokens: jnp.ndarray
+    pos: jnp.ndarray
+    in_tok: jnp.ndarray
+    ctx_len: jnp.ndarray
+    gen: jnp.ndarray
+    budget: jnp.ndarray
+    live: jnp.ndarray
+
+
+def sample_tokens(logits: jnp.ndarray, key: jax.Array,
+                  temperature: float = 0.0) -> jnp.ndarray:
+    """(B, 1, V) -> (B, 1) greedy (t=0) or temperature sampling.
+
+    Lives here (not ``serve.engine``) so both the lockstep engines and the
+    jitted quantum share one sampling implementation without an import
+    cycle; ``serve.engine`` re-exports it.
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits.astype(jnp.float32) / temperature,
+        axis=-1).astype(jnp.int32)
+
+
+def _sample(logits: jnp.ndarray, key: jax.Array, temperature: float):
+    """(B, 1, V) -> (B,) — the quantum's squeezed view of sample_tokens."""
+    return sample_tokens(logits, key, temperature)[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("mcfg", "temperature"),
+                   donate_argnums=(1, 2))
+def run_quantum(params, state: LaneState, cache, key: jax.Array, m, eos_id,
+                *, mcfg: ModelConfig, temperature: float):
+    """One grain-sized work quantum: ``m`` micro-steps for ALL B slots.
+
+    Each micro-step is one ``api.decode`` over the whole slot batch at each
+    slot's own cursor. A slot still inside its context feeds the next
+    context token (chunked prefill); a slot past its context feeds — and
+    records — the token it just sampled (decode). Finished/empty lanes are
+    frozen in place. ``m`` and ``eos_id`` are traced, shapes are fixed by
+    ``(n_slots, max_len)``: one compiled program serves every tick of every
+    occupancy and every grain size.
+    """
+    B, L = state.tokens.shape
+    slot = jnp.arange(B)
+
+    def micro(t, carry):
+        st, cache = carry
+        logits, cache = api.decode(params, mcfg, st.in_tok[:, None],
+                                   st.pos, cache)
+        sampled = _sample(logits, jax.random.fold_in(key, t), temperature)
+        new_pos = st.pos + 1
+        # this step fed the last context token (or a generated one): its
+        # logits produce a fresh token for the slot
+        emitting = st.live & (new_pos >= st.ctx_len)
+        wpos = jnp.minimum(new_pos, L - 1)
+        cur = st.tokens[slot, wpos]
+        tokens = st.tokens.at[slot, wpos].set(
+            jnp.where(emitting, sampled, cur))
+        gen = st.gen + emitting.astype(jnp.int32)
+        finished = emitting & ((sampled == eos_id) | (gen >= st.budget)
+                               | (new_pos >= L - 1))
+        return LaneState(
+            tokens=tokens,
+            pos=jnp.where(st.live, new_pos, st.pos),
+            in_tok=jnp.where(st.live, tokens[slot, wpos], st.in_tok),
+            ctx_len=st.ctx_len,
+            gen=gen,
+            budget=st.budget,
+            live=st.live & ~finished,
+        ), cache
+
+    return jax.lax.fori_loop(0, m, micro, (state, cache))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def load_slot(state: LaneState, s, row, ctx_len, budget) -> LaneState:
+    """Admit one request into slot ``s`` (traced — one compiled program
+    serves every slot): context row in, cursor to 0, lane made live."""
+    return LaneState(
+        tokens=state.tokens.at[s].set(row),
+        pos=state.pos.at[s].set(0),
+        in_tok=state.in_tok.at[s].set(row[0]),
+        ctx_len=state.ctx_len.at[s].set(ctx_len),
+        gen=state.gen.at[s].set(0),
+        budget=state.budget.at[s].set(budget),
+        live=state.live.at[s].set(True),
+    )
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def free_slot(state: LaneState, s) -> LaneState:
+    """Kill slot ``s``'s lane (preemption): the frozen lane stops burning
+    micro-steps until an admission overwrites it."""
+    return state._replace(live=state.live.at[s].set(False))
+
+
+@functools.partial(jax.jit, static_argnames=("axes_def",),
+                   donate_argnums=(0,))
+def reset_slot_rows(cache, mask, *, axes_def: tuple):
+    """Zero the cache rows of admitted slots (mask: (B,) bool).
+
+    Attention KV rows are masked by position anyway, but recurrent-state
+    leaves (ssm/xlstm families) are cumulative — a refilled slot must start
+    its chunked re-prefill from a clean state.
+    """
+    leaves, treedef = jax.tree.flatten(cache)
+    out = []
+    for x, bi in zip(leaves, axes_def):
+        shape = [1] * x.ndim
+        shape[bi] = x.shape[bi]
+        m = mask.reshape(shape)
+        out.append(jnp.where(m, jnp.zeros((), x.dtype), x))
+    return jax.tree.unflatten(treedef, out)
+
+
+# ------------------------------------------------------------- LM engine ----
+class TPFIFOEngine(TPFIFODriver):
+    """Work-sharing FIFO LM server with grain-controlled continuous batching.
+
+    B device slots over one KV cache; each tick dispatches ONE jitted
+    quantum of ``m`` unified prefill/decode micro-steps (``run_quantum``).
+    Long prompts prefill in grain-sized chunks alongside other slots'
+    decodes; finished slots refill from the queue at the next dispatch with
+    no shape change; over-budget requests are preempted and requeued
+    losslessly (``preempt_quanta``).
+    """
+
+    def __init__(self, params, cfg: ModelConfig, n_slots: int, max_len: int,
+                 grain: int = 8, policy: str = "fifo",
+                 preempt_quanta: int | None = None, temperature: float = 0.0,
+                 eos_id: int = 2, seed: int = 0):
+        super().__init__(n_slots, grain=grain, policy=policy,
+                         preempt_quanta=preempt_quanta)
+        self.params = params
+        self.cfg = cfg
+        self.max_len = max_len
+        self.temperature = temperature
+        self.eos_id = eos_id
+        self.key = jax.random.key(seed)
+
+        self.cache = api.init_cache(cfg, n_slots, max_len)
+        self._axes_def = tuple(jax.tree.leaves(
+            api.cache_batch_axes(cfg, n_slots, max_len)))
+        # device-resident lane state: per tick the host pulls only the (B,)
+        # live/gen vectors; token rows cross back only at retire/preempt
+        # boundaries, so tick cost is one quantum dispatch + two scalarish
+        # transfers regardless of grain
+        B = n_slots
+        self._state = LaneState(
+            tokens=jnp.zeros((B, max_len), jnp.int32),
+            pos=jnp.zeros((B,), jnp.int32),
+            in_tok=jnp.zeros((B,), jnp.int32),
+            ctx_len=jnp.ones((B,), jnp.int32),
+            gen=jnp.zeros((B,), jnp.int32),
+            budget=jnp.zeros((B,), jnp.int32),
+            live=jnp.zeros((B,), bool))
+        self._host_ctx_len = np.ones((B,), np.int32)
+
+    def submit(self, req, at: float | None = None):
+        if len(req.prompt) + req.max_new >= self.max_len:
+            raise ValueError(
+                f"prompt ({len(req.prompt)}) + max_new ({req.max_new}) "
+                f"must stay below max_len ({self.max_len})")
+        super().submit(req, at=at)
+
+    # -- TPFIFODriver hooks ----------------------------------------------
+    def _work_estimate(self, t: Ticket) -> int:
+        # context replay + remaining generation: emission starts on the
+        # micro-step that feeds the LAST context token, so the total is
+        # ctx_len + budget - 1, not ctx_len + budget. Invariant across
+        # resumes: ctx grows by exactly the tokens the budget shrinks by.
+        return len(t.req.prompt) + t.req.max_new - 1
+
+    def _load_slot(self, s: int, t: Ticket):
+        req = t.req
+        ctx = np.asarray(list(req.prompt) + list(req.out), np.int32)
+        row = np.zeros((self.max_len,), np.int32)
+        row[:len(ctx)] = ctx
+        self._host_ctx_len[s] = len(ctx)
+        self._state = load_slot(
+            self._state, jnp.asarray(s, jnp.int32), jnp.asarray(row),
+            jnp.asarray(len(ctx), jnp.int32),
+            jnp.asarray(req.max_new - len(req.out), jnp.int32))
+
+    def _sync_out(self, s: int, t: Ticket, gen: int):
+        """Pull slot ``s``'s generated tokens into ``req.out`` (boundary
+        crossings only: retire, preempt, or an explicit flush)."""
+        pl = int(self._host_ctx_len[s])
+        row = np.asarray(self._state.tokens[s])
+        t.req.out[t.seg_base:] = row[pl:pl + gen].tolist()
+
+    # -- tick -------------------------------------------------------------
+    def step(self) -> int:
+        admitted = self._admit_free_slots()
+        if admitted:
+            mask = np.zeros((self.B,), bool)
+            mask[admitted] = True
+            self.cache = reset_slot_rows(self.cache, jnp.asarray(mask),
+                                         axes_def=self._axes_def)
+        if not any(t is not None for t in self.active):
+            return 0
+        m = self._tick_m()
+        self.key, k = jax.random.split(self.key)
+        self._state, self.cache = run_quantum(
+            self.params, self._state, self.cache, k,
+            jnp.asarray(m, jnp.int32), jnp.asarray(self.eos_id, jnp.int32),
+            mcfg=self.cfg, temperature=self.temperature)
+        live = np.asarray(self._state.live)
+        gen = np.asarray(self._state.gen)
+
+        served = 0
+        for s, t in enumerate(self.active):
+            if t is None:
+                continue
+            served += 1
+            if not live[s]:
+                self._sync_out(s, t, int(gen[s]))
+                self._retire_slot(s)
+            elif self._should_preempt(t, progressed=bool(gen[s] > 0)):
+                self._sync_out(s, t, int(gen[s]))
+                self._state = free_slot(self._state,
+                                        jnp.asarray(s, jnp.int32))
+                self._preempt_slot(s)
+        return served
+
+
+# ----------------------------------------------------------- MCTS engine ----
+class TPFIFOMCTSEngine(TPFIFODriver):
+    """TPFIFO over search-guided decoding: a quantum is ``m`` search+commit
+    rounds of ``mcts_decode_search_batch`` (each round already advances all
+    slots' trees through one jitted program). Admission, preemption, and
+    requeue happen only at quantum boundaries — the grain dial trades
+    scheduling responsiveness against per-round host dispatch, exactly the
+    paper's Table I axis.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, dcfg, n_slots: int,
+                 max_prompt_len: int, grain: int = 4, policy: str = "fifo",
+                 preempt_quanta: int | None = None, eos_id: int = 2,
+                 seed: int = 0):
+        super().__init__(n_slots, grain=grain, policy=policy,
+                         preempt_quanta=preempt_quanta)
+        self.params = params
+        self.cfg = cfg
+        self.dcfg = dcfg
+        self.max_prompt_len = max_prompt_len
+        self.eos_id = eos_id
+        self.key = jax.random.key(seed)
+        self.tokens = np.zeros((n_slots, max_prompt_len), np.int32)
+        self.lens = np.ones((n_slots,), np.int32)
+        self._done = np.zeros((n_slots,), bool)
+        self.search_stats: collections.deque = collections.deque(maxlen=256)
+
+    def submit(self, req, at: float | None = None):
+        if len(req.prompt) + req.max_new > self.max_prompt_len:
+            raise ValueError(
+                f"prompt ({len(req.prompt)}) + max_new ({req.max_new}) "
+                f"exceeds max_prompt_len ({self.max_prompt_len})")
+        super().submit(req, at=at)
+
+    def _work_estimate(self, t: Ticket) -> int:
+        return t.req.max_new - len(t.req.out)     # commit rounds remaining
+
+    def _load_slot(self, s: int, t: Ticket):
+        req = t.req
+        ctx = np.asarray(list(req.prompt) + list(req.out), np.int32)
+        L = len(ctx)
+        self.tokens[s, :] = 0
+        self.tokens[s, :L] = ctx
+        self.lens[s] = L
+        self._done[s] = False
+
+    def step(self) -> int:
+        from repro.serve.mcts_decode import mcts_decode_search_batch
+
+        self._admit_free_slots()
+        if not any(t is not None for t in self.active):
+            return 0
+        m = self._tick_m()
+        served = 0
+        for _ in range(m):
+            mask = np.array([t is not None for t in self.active]) & ~self._done
+            if not mask.any():
+                break           # grain tail after every slot finished
+            served = max(served, int(mask.sum()))
+            self.key, k = jax.random.split(self.key)
+            _, stats = mcts_decode_search_batch(
+                self.params, self.cfg, jnp.asarray(self.tokens), self.dcfg,
+                k, prompt_lens=jnp.asarray(self.lens),
+                request_mask=jnp.asarray(mask))
+            self.search_stats.append(stats)
+            for s, t in enumerate(self.active):
+                if t is None or self._done[s]:
+                    continue
+                tok = int(stats["best_tokens"][s])
+                t.req.out.append(tok)
+                self.tokens[s, self.lens[s]] = tok
+                self.lens[s] += 1
+                if (tok == self.eos_id or len(t.req.out) >= t.req.max_new
+                        or self.lens[s] >= self.max_prompt_len):
+                    self._done[s] = True
+        for s, t in enumerate(self.active):
+            if t is None:
+                continue
+            if self._done[s]:
+                self._retire_slot(s)
+            elif self._should_preempt(t):
+                self._preempt_slot(s)
+        return served

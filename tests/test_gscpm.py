@@ -210,6 +210,31 @@ def test_schedules_preserve_budget():
         assert scheduler.schedule_stats(s)["lane_iterations"] == 512, policy
 
 
+@settings(max_examples=15, deadline=None)
+@given(n_playouts=st.integers(8, 640),
+       tasks=st.sampled_from([1, 3, 5, 8, 10, 32]),
+       workers=st.sampled_from([2, 4, 8]))
+def test_property_rebalance_stats(n_playouts, tasks, workers):
+    """`schedule_stats` properties of the rebalance policy vs fifo:
+
+    - total-playout conservation: both policies schedule exactly the same
+      lane-iteration budget (playouts are fungible; the split may floor);
+    - idle-lane fraction: rebalance never utilizes lanes worse than fifo
+      (it exists to re-split fifo's masked tail across all lanes);
+    - rebalance idles lanes only in the final sub-width round, and wastes
+      fewer than W lane-iterations doing so.
+    """
+    fifo = scheduler.make_schedule(n_playouts, tasks, workers, "fifo")
+    reb = scheduler.make_schedule(n_playouts, tasks, workers, "rebalance")
+    sf = scheduler.schedule_stats(fifo)
+    sr = scheduler.schedule_stats(reb)
+    assert sr["lane_iterations"] == sf["lane_iterations"]
+    assert sr["lane_iterations"] <= n_playouts
+    assert sr["utilization"] >= sf["utilization"] - 1e-12
+    assert all(r.active.all() for r in reb[:-1])
+    assert sr["masked_lane_iterations"] < workers
+
+
 def test_rng_streams_differ_between_tasks():
     """Different tasks must explore differently (per-task MKL-stream analogue)."""
     key = jax.random.PRNGKey(0)

@@ -1,0 +1,267 @@
+"""TPFIFO serving: queue discipline, chunked prefill, preemption, compiles.
+
+The correctness anchors:
+- grain invariance: greedy output is bit-identical for any quantum size
+  (the grain dial moves scheduling boundaries, never the computation);
+- lockstep equivalence: the unified prefill/decode micro-step path produces
+  the same greedy tokens as SlotEngine's whole-prompt-prefill + decode path;
+- lossless preemption: requeue + chunked re-prefill of prompt ⊕ out resumes
+  a greedy request bit-identically;
+- one compiled quantum: occupancy, admissions, retirements, grain changes
+  and prompt-length mixes never grow ``run_quantum``'s jit cache.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import scheduler
+from repro.models import api
+from repro.serve.engine import Request, SlotEngine
+from repro.serve.tpfifo import (QueueStats, TPFIFOEngine, TPFIFOMCTSEngine,
+                                run_quantum)
+
+B, MAX_LEN = 2, 32
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = configs.reduced_config("smollm-135m").replace(n_layers=2)
+    params = api.init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def mixed_requests(cfg, lens=(6, 4, 9, 5, 7), max_new=5, seed=1):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab,
+                                        size=(int(n),)).astype(np.int32),
+                    max_new=max_new)
+            for i, n in enumerate(lens)]
+
+
+def engine(cfg, params, **kw):
+    kw.setdefault("grain", 4)
+    return TPFIFOEngine(params, cfg, n_slots=B, max_len=MAX_LEN,
+                        eos_id=-1, **kw)
+
+
+def outs(done):
+    return {r.rid: list(r.out) for r in done}
+
+
+# --------------------------------------------------------------- fairness ----
+def test_fifo_order_preserved_mixed_lengths(small_lm):
+    """Admission order == submission order regardless of prompt lengths,
+    and every request completes with its full budget."""
+    cfg, params = small_lm
+    eng = engine(cfg, params)
+    reqs = mixed_requests(cfg)
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == len(reqs)
+    assert eng.admission_order == [r.rid for r in reqs]
+    assert all(len(r.out) == 5 for r in done)
+    assert all(0 <= t < cfg.vocab for r in done for t in r.out)
+
+
+def test_grain_invariance_greedy(small_lm):
+    """Same requests at grain 1/4/16 -> identical greedy outputs: the grain
+    only moves dispatch boundaries."""
+    cfg, params = small_lm
+    ref = None
+    for grain in (1, 4, 16):
+        eng = engine(cfg, params, grain=grain)
+        for r in mixed_requests(cfg):
+            eng.submit(r)
+        o = outs(eng.run())
+        if ref is None:
+            ref = o
+        assert o == ref, f"grain {grain} diverged"
+
+
+def test_matches_lockstep_greedy(small_lm):
+    """The unified micro-step path == SlotEngine's prefill+decode path,
+    including the max_new=1 budget edge (one token, emitted at admission
+    on the lockstep side)."""
+    cfg, params = small_lm
+    eng = engine(cfg, params)
+    lock = SlotEngine(params, cfg, n_slots=B, max_len=MAX_LEN, eos_id=-1)
+    for e in (eng, lock):
+        for r in mixed_requests(cfg):
+            e.submit(r)
+        one = mixed_requests(cfg, lens=(5,), max_new=1, seed=4)[0]
+        one.rid = 10
+        e.submit(one)
+    o_eng, o_lock = outs(eng.run()), outs(lock.run())
+    assert o_eng == o_lock
+    assert len(o_eng[10]) == 1          # budget honored exactly, both paths
+
+
+def test_run_reusable_after_long_service(small_lm):
+    """run() bounds ticks per CALL, not per engine lifetime: an engine that
+    has already served many ticks must still drain new submissions."""
+    cfg, params = small_lm
+    eng = engine(cfg, params)
+    eng.submit(mixed_requests(cfg, lens=(4,), max_new=2)[0])
+    assert len(eng.run()) == 1
+    eng._ticks = 10_000            # simulate a long-lived server
+    r2 = mixed_requests(cfg, lens=(6,), max_new=2, seed=3)[0]
+    r2.rid = 99
+    eng.submit(r2)
+    done = eng.run()
+    assert done[-1].rid == 99 and len(done[-1].out) == 2
+
+
+# ------------------------------------------------------------- preemption ----
+def test_preempt_resume_lossless(small_lm):
+    """A preempted request resumes without losing generated tokens: the
+    requeued request re-prefills prompt ⊕ out and greedy decoding lands on
+    the exact same continuation."""
+    cfg, params = small_lm
+    base = engine(cfg, params)
+    for r in mixed_requests(cfg):
+        base.submit(r)
+    ref = outs(base.run())
+
+    eng = engine(cfg, params, grain=2, preempt_quanta=1)
+    for r in mixed_requests(cfg):
+        eng.submit(r)
+    done = eng.run()
+    st = eng.stats()
+    assert st.n_preemptions > 0            # the knob actually fired
+    assert len(done) == 5
+    assert outs(done) == ref               # ...and cost zero tokens
+
+
+def test_one_per_core_runs_to_completion(small_lm):
+    """The paper's one-task-per-lane baseline never preempts, even with the
+    preemption knob set."""
+    cfg, params = small_lm
+    eng = engine(cfg, params, policy="one_per_core", preempt_quanta=1)
+    for r in mixed_requests(cfg):
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 5
+    assert eng.stats().n_preemptions == 0
+
+
+def test_rebalance_widens_quanta_when_lanes_idle(small_lm):
+    """rebalance re-splits idle lanes' budget over active ones: with 1
+    active request on B slots the dispatch quantum grows by ~B/1."""
+    cfg, params = small_lm
+    eng = engine(cfg, params, grain=4, policy="rebalance")
+    eng.submit(mixed_requests(cfg)[0])
+    eng._admit_free_slots()
+    assert eng._tick_m() == 4 * B
+
+
+# --------------------------------------------------- chunked prefill / HOL ----
+def test_chunked_prefill_never_blocks_short_requests(small_lm):
+    """A long prompt prefills in grain-sized chunks while a short request
+    decodes: the short request must finish first (no head-of-line blocking,
+    unlike a monolithic prefill of the long prompt)."""
+    cfg, params = small_lm
+    rng = np.random.default_rng(0)
+    long_req = Request(rid=0, prompt=rng.integers(
+        1, cfg.vocab, size=(24,)).astype(np.int32), max_new=3)
+    short_req = Request(rid=1, prompt=rng.integers(
+        1, cfg.vocab, size=(4,)).astype(np.int32), max_new=3)
+    eng = engine(cfg, params, grain=2)
+    eng.submit(long_req)
+    eng.submit(short_req)
+    done = eng.run()
+    assert [r.rid for r in done] == [1, 0]
+    assert len(long_req.out) == 3 and len(short_req.out) == 3
+
+
+# ------------------------------------------------------------ compilation ----
+def test_no_recompile_across_occupancy_and_grain(small_lm):
+    """One compiled quantum serves every queue occupancy, admission
+    pattern, prompt-length mix, and grain size at fixed (n_slots,
+    max_len)."""
+    cfg, params = small_lm
+    eng = engine(cfg, params)
+    for r in mixed_requests(cfg):
+        eng.submit(r)
+    eng.run()
+    before = run_quantum._cache_size()
+    # different occupancy (1 request), different lengths, different grain,
+    # preemption on — same shapes
+    eng2 = engine(cfg, params, grain=7, preempt_quanta=2)
+    eng2.submit(mixed_requests(cfg, lens=(11,), max_new=3)[0])
+    eng2.run()
+    eng3 = engine(cfg, params, grain=2)
+    for r in mixed_requests(cfg, lens=(3, 12, 8), max_new=2, seed=9):
+        eng3.submit(r)
+    eng3.run()
+    assert run_quantum._cache_size() == before
+
+
+# --------------------------------------------------------------- telemetry ----
+def test_queue_stats_telemetry(small_lm):
+    cfg, params = small_lm
+    eng = engine(cfg, params)
+    for r in mixed_requests(cfg):
+        eng.submit(r)
+    eng.run()
+    st = eng.stats()
+    assert isinstance(st, QueueStats)
+    assert st.n_finished == 5
+    assert st.tokens == 25
+    assert st.quanta >= 5                  # every request ran >=1 quantum
+    assert st.throughput_tok_s > 0
+    assert 0 <= st.queue_wait_p50 <= st.queue_wait_p95
+    assert 0 <= st.latency_p50 <= st.latency_p95
+    assert st.service_p50 > 0
+    # B slots: later submissions wait for a slot, so someone queued
+    assert st.queue_wait_p95 > 0
+
+
+def test_submit_rejects_oversized_request(small_lm):
+    cfg, params = small_lm
+    eng = engine(cfg, params)
+    with pytest.raises(ValueError):
+        eng.submit(Request(rid=0,
+                           prompt=np.arange(1, MAX_LEN - 2, dtype=np.int32),
+                           max_new=8))
+
+
+# ------------------------------------------------------------ quantum plans ----
+def test_quantum_plan_covers_work_exactly():
+    for policy in ("fifo", "rebalance"):
+        for steps, grain in ((33, 8), (5, 8), (16, 4), (1, 4)):
+            plan = scheduler.quantum_plan(steps, grain, policy)
+            assert sum(plan) == steps, (policy, steps, grain)
+            assert all(m >= 1 for m in plan)
+    # one_per_core: a single monolithic quantum
+    assert scheduler.quantum_plan(33, 8, "one_per_core") == [33]
+
+
+# ------------------------------------------------------------- MCTS engine ----
+def test_tpfifo_mcts_engine_serves_queue(small_lm):
+    """Search-guided TPFIFO: quanta of m search+commit rounds, preemption
+    at quantum boundaries, FIFO order preserved."""
+    from repro.serve.mcts_decode import MCTSDecodeConfig
+
+    cfg, params = small_lm
+    dcfg = MCTSDecodeConfig(n_playouts=8, n_tasks=2, n_workers=2, branch=3,
+                            max_depth=2, rollout_len=2, tree_cap=64)
+    eng = TPFIFOMCTSEngine(params, cfg, dcfg, n_slots=2, max_prompt_len=16,
+                           grain=2, eos_id=-1, preempt_quanta=1)
+    reqs = mixed_requests(cfg, lens=(4, 6, 5), max_new=3)
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 3
+    # preempted requests re-enter the admission log; FIRST admissions must
+    # still be in FIFO submission order
+    assert list(dict.fromkeys(eng.admission_order)) == [0, 1, 2]
+    assert all(len(r.out) == 3 for r in done)
+    assert all(0 <= t < cfg.vocab for r in done for t in r.out)
+    st = eng.stats()
+    assert st.n_finished == 3 and st.tokens == 9
