@@ -3,12 +3,18 @@
 Runs one benchmark per paper table/figure (CPU-scaled budgets), the kernel
 microbenches, and the roofline-table render; writes JSON artifacts to
 artifacts/bench/ and prints a summary. Pass --full for the larger budgets.
+
+When the run includes fig7 (and optionally tpfifo), it also writes a
+root-level ``BENCH_mcts.json`` trajectory summary — search playouts/s and
+best serving speedup for this host/backend — so the perf trajectory
+accumulates across PRs (CI uploads it as an artifact per commit).
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 import traceback
 
@@ -46,11 +52,13 @@ def main():
         jobs = {k: v for k, v in jobs.items() if any(s in k for s in keep)}
 
     failures = []
+    results: dict[str, dict] = {}
     for name, job in jobs.items():
         t0 = time.perf_counter()
         print(f"=== {name} ===", flush=True)
         try:
             res = job()
+            results[name] = res
             path = save_result(name, res)
             print(json.dumps(_summ(name, res), indent=1))
             print(f"[{name}] ok in {time.perf_counter()-t0:.1f}s -> {path}\n",
@@ -59,10 +67,52 @@ def main():
             failures.append(name)
             print(f"[{name}] FAILED: {type(e).__name__}: {e}")
             traceback.print_exc()
+    traj = write_mcts_trajectory(results)
+    if traj:
+        print(f"perf trajectory -> {traj}")
     print("benchmarks complete;",
           f"{len(jobs) - len(failures)}/{len(jobs)} ok",
           ("FAILED: " + ", ".join(failures)) if failures else "")
     raise SystemExit(1 if failures else 0)
+
+
+def write_mcts_trajectory(results: dict) -> str | None:
+    """Write root-level BENCH_mcts.json from a run containing fig7.
+
+    The accumulating perf headline of the repo: best search throughput
+    (fig7's playouts/s sweep) plus the best TPFIFO serving speedup when
+    that benchmark also ran. One file per host/backend snapshot — CI
+    uploads it per commit so regressions are visible as a trajectory.
+    """
+    fig7 = results.get("fig7_speedup")
+    if not fig7:
+        return None
+    import jax
+
+    best_rate, best_point = 0.0, {}
+    for sched, pts in fig7["curves"].items():
+        for n_tasks, p in pts.items():
+            if p["playouts_per_s"] > best_rate:
+                best_rate = p["playouts_per_s"]
+                best_point = {"scheduler": sched, "n_tasks": int(n_tasks)}
+    seq = fig7["sequential_playouts_per_s"]
+    payload = {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "backend": jax.default_backend(),
+        "board": fig7["board"],
+        "n_workers": fig7["n_workers"],
+        "n_playouts": fig7["n_playouts"],
+        "sequential_playouts_per_s": seq,
+        "best_playouts_per_s": best_rate,
+        "best_point": best_point,
+        "best_speedup_vs_sequential": best_rate / max(seq, 1e-9),
+    }
+    if "tpfifo" in results:
+        payload["tpfifo_best_speedup"] = results["tpfifo"]["best_speedup"]
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_mcts.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return os.path.abspath(path)
 
 
 def _summ(name: str, res: dict) -> dict:

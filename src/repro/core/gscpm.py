@@ -7,8 +7,11 @@ shared tree. Here (DESIGN.md §2):
 - a *lane* (vmapped worker) plays the role of a hardware thread;
 - a *task* is an ``m``-iteration chunk executed as a ``lax.fori_loop`` of
   batch-synchronous iterations;
-- a *sync iteration* selects W leaves (in ``vl_rounds`` virtual-loss rounds),
-  dedup-expands the proposed (leaf, move) pairs with prefix-sum slot
+- a *sync iteration* selects W leaves (in ``vl_rounds`` virtual-loss rounds)
+  via a level-synchronous batched descent — all W lanes step down the tree
+  in lockstep, one ``kernels.ops.uct_select`` (W, C) tile per level, the
+  TPU twin of the paper's 512-bit VPU-vectorized UCT loop (DESIGN.md §11) —
+  then dedup-expands the proposed (leaf, move) pairs with prefix-sum slot
   allocation (the paper's atomic child index), runs W playouts, and
   scatter-adds the results along the W paths (the paper's atomic w_j/n_j);
 - per-task RNG streams come from ``fold_in`` (the paper's per-task MKL
@@ -39,26 +42,42 @@ from repro.core.tree import (
     add_vloss,
     backup_paths,
     best_child,
+    child_stat_tile,
     init_tree,
     reset_vloss,
     root_value,
 )
+from repro.kernels import ops
 
 
 @dataclasses.dataclass(frozen=True)
 class GSCPMConfig:
-    """Knobs of the paper's experiment grid + the TPU-specific ones."""
+    """Knobs of the paper's experiment grid + the TPU-specific ones.
+
+    Fields marked compare=False are excluded from the config's hash/eq:
+    ``cp`` reaches the jitted chunks as a traced scalar operand, and
+    ``n_playouts``/``n_tasks``/``scheduler`` only shape the host-side task
+    schedule (the grain arrives as the traced ``m``), so configs differing
+    only in those knobs share one compiled program ("knobs traced ⇒ zero
+    recompiles" — the fig7/ablation sweeps pay one compile total). Traced
+    code must never read a compare=False field — it would silently bake the
+    first value seen into the cached program.
+    """
 
     board_size: int = 11
-    n_playouts: int = 4096          # paper: 1,048,576 (scaled for CPU harness)
-    n_tasks: int = 64               # the grain dial: m = n_playouts / n_tasks
+    # paper: 1,048,576 playouts (scaled for CPU harness)
+    n_playouts: int = dataclasses.field(default=4096, compare=False)
+    # the grain dial: m = n_playouts / n_tasks
+    n_tasks: int = dataclasses.field(default=64, compare=False)
     n_workers: int = 16             # parallel lanes (hardware-thread analogue)
     vl_rounds: int = 1              # virtual-loss rounds per sync iteration
     virtual_loss: float = 1.0
-    cp: float = 1.0                 # paper: Cp = 1.0
+    cp: float = dataclasses.field(default=1.0, compare=False)  # paper: Cp = 1.0
     select_noise: float = 1e-3      # per-lane UCT tie-break jitter
     tree_cap: int = 1 << 15
-    scheduler: str = "fifo"         # fifo | rebalance | one_per_core | sequential
+    # fifo | rebalance | one_per_core | sequential
+    scheduler: str = dataclasses.field(default="fifo", compare=False)
+    descent: str = "batched"        # batched (level-synchronous) | scalar (oracle)
 
     @property
     def spec(self) -> hx.HexSpec:
@@ -118,6 +137,86 @@ def select_one(tree: Tree, root_board: jnp.ndarray, spec: hx.HexSpec, cp: float,
     node, board, depth, path, n_empty, _ = jax.lax.while_loop(
         cond, body, (jnp.int32(0), root_board, jnp.int32(0), path0, n_empty0, False))
     return path, depth, node, board, n_empty
+
+
+def level_noise(noise_keys: jax.Array, depths: jnp.ndarray, n_slots: int,
+                scale: float) -> jnp.ndarray:
+    """(W, C) tie-break noise for one descent level.
+
+    Lane w draws from ``fold_in(noise_keys[w], depths[w])`` — exactly the
+    stream the scalar per-lane oracle consumes at that depth, which is what
+    makes the lockstep descent bit-identical to it.
+    """
+    return scale * jax.vmap(
+        lambda k, d: jax.random.uniform(jax.random.fold_in(k, d), (n_slots,))
+    )(noise_keys, depths)
+
+
+def advance_paths(paths: jnp.ndarray, depths: jnp.ndarray, child: jnp.ndarray,
+                  step: jnp.ndarray) -> jnp.ndarray:
+    """Write each stepping lane's chosen child at path level depth + 1."""
+    D = paths.shape[1]
+    return jnp.where(
+        (jnp.arange(D)[None, :] == (depths + 1)[:, None]) & step[:, None],
+        child[:, None], paths)
+
+
+def select_batch(tree: Tree, root_board: jnp.ndarray, spec: hx.HexSpec, cp,
+                 noise_keys: jax.Array, noise_scale: float):
+    """Level-synchronous batched descent: all W lanes in lockstep.
+
+    Each level gathers the lanes' child stats into one (W, C) tile
+    (``tree.child_stat_tile``) and picks all W children with a single
+    ``kernels.ops.uct_select`` call — the Pallas VPU kernel on TPU, the jnp
+    reference elsewhere (DESIGN.md §11). Lanes that reached a
+    not-fully-expanded or terminal node (or the depth cap) are masked out of
+    the tile and held in place. Bit-identical to ``jax.vmap(select_one)``
+    under the same RNG schedule (the per-lane oracle; pinned in
+    tests/test_batched_descent.py).
+
+    Returns (paths, depths, leaves, boards, n_empty), each batched over W.
+    """
+    n_cells = spec.n_cells
+    max_depth = n_cells + 1
+    cap = tree.cap
+    C = tree.max_children
+    W = noise_keys.shape[0]
+
+    nodes0 = jnp.zeros((W,), jnp.int32)
+    boards0 = jnp.tile(root_board[None, :], (W, 1))
+    depths0 = jnp.zeros((W,), jnp.int32)
+    paths0 = jnp.full((W, max_depth), cap, dtype=jnp.int32).at[:, 0].set(0)
+    n_empty0 = jnp.broadcast_to(
+        (root_board == hx.EMPTY).sum().astype(jnp.int32), (W,))
+    done0 = jnp.zeros((W,), bool)
+
+    def cond(st):
+        return ~st[-1].all()
+
+    def body(st):
+        nodes, boards, depths, paths, n_empty, done = st
+        n_kids = tree.n_children[nodes]
+        terminal = n_empty == 0
+        fully = (n_kids == n_empty) & ~terminal
+        safe, valid, wins, visits, vloss, ptot = child_stat_tile(tree, nodes)
+        noise = (level_noise(noise_keys, depths, C, noise_scale)
+                 if noise_scale > 0.0 else None)
+        picks = ops.uct_select(wins, visits, vloss, ptot, valid, cp,
+                               noise=noise, lane_mask=~done)
+        child = safe[jnp.arange(W), picks]
+        mv = tree.move[child]
+        new_boards = jax.vmap(hx.place)(boards, mv, tree.to_move[nodes])
+        step = fully & (depths < max_depth - 2) & ~done
+        nodes = jnp.where(step, child, nodes)
+        boards = jnp.where(step[:, None], new_boards, boards)
+        paths = advance_paths(paths, depths, child, step)
+        depths = jnp.where(step, depths + 1, depths)
+        n_empty = jnp.where(step, n_empty - 1, n_empty)
+        return nodes, boards, depths, paths, n_empty, done | ~step
+
+    nodes, boards, depths, paths, n_empty, _ = jax.lax.while_loop(
+        cond, body, (nodes0, boards0, depths0, paths0, n_empty0, done0))
+    return paths, depths, nodes, boards, n_empty
 
 
 def propose_move(tree: Tree, leaf: jnp.ndarray, board: jnp.ndarray,
@@ -208,8 +307,14 @@ def expand_batch(tree: Tree, leaves: jnp.ndarray, moves: jnp.ndarray,
 
 # ---------------------------------------------------------- sync iteration ----
 def sync_iteration(tree: Tree, root_board: jnp.ndarray, cfg: GSCPMConfig,
-                   iter_keys: jnp.ndarray, active: jnp.ndarray) -> Tree:
-    """One batched GSCPM iteration of width W = cfg.n_workers."""
+                   cp, iter_keys: jnp.ndarray, active: jnp.ndarray) -> Tree:
+    """One batched GSCPM iteration of width W = cfg.n_workers.
+
+    ``cp`` is the traced exploration constant (never read from cfg here —
+    see GSCPMConfig). Selection runs the level-synchronous batched descent
+    by default; ``cfg.descent == "scalar"`` keeps the per-lane while-loop
+    oracle (same RNG schedule, bit-identical trees).
+    """
     spec = cfg.spec
     W = cfg.n_workers
     R = max(1, min(cfg.vl_rounds, W))
@@ -218,13 +323,25 @@ def sync_iteration(tree: Tree, root_board: jnp.ndarray, cfg: GSCPMConfig,
     Wr = W // R
 
     def select_group(tree_r, keys_g):
-        def one(k):
-            k_noise, k_move, k_po = jax.random.split(k, 3)
-            path, depth, leaf, board, n_empty = select_one(
-                tree_r, root_board, spec, cfg.cp, k_noise, cfg.select_noise)
-            mv = propose_move(tree_r, leaf, board, spec, k_move)
-            return path, depth, leaf, board, mv, k_po
-        return jax.vmap(one)(keys_g)
+        # identical RNG schedule on both paths: per-lane (noise, move,
+        # playout) keys come from one split of the lane's iteration key
+        ks = jax.vmap(lambda k: jax.random.split(k, 3))(keys_g)
+        k_noise, k_move, k_po = ks[:, 0], ks[:, 1], ks[:, 2]
+        if cfg.descent == "scalar":
+            def one(kn, km):
+                path, depth, leaf, board, n_empty = select_one(
+                    tree_r, root_board, spec, cp, kn, cfg.select_noise)
+                mv = propose_move(tree_r, leaf, board, spec, km)
+                return path, depth, leaf, board, mv
+            out = jax.vmap(one)(k_noise, k_move)
+        else:
+            paths, depths, leaves, boards, _ = select_batch(
+                tree_r, root_board, spec, cp, k_noise, cfg.select_noise)
+            mvs = jax.vmap(
+                lambda l, b, k: propose_move(tree_r, l, b, spec, k)
+            )(leaves, boards, k_move)
+            out = (paths, depths, leaves, boards, mvs)
+        return (*out, k_po)
 
     keys_r = iter_keys.reshape(R, Wr, *iter_keys.shape[1:])
     active_r = active.reshape(R, Wr)
@@ -275,12 +392,13 @@ def sync_iteration(tree: Tree, root_board: jnp.ndarray, cfg: GSCPMConfig,
 @functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0,))
 def run_chunk(tree: Tree, root_board: jnp.ndarray, cfg: GSCPMConfig,
               task_keys: jnp.ndarray, active: jnp.ndarray,
-              m: jnp.ndarray) -> Tree:
-    """Run `m` sync iterations (one task-grain per lane) — jitted once per cfg."""
+              m: jnp.ndarray, cp) -> Tree:
+    """Run `m` sync iterations (one task-grain per lane) — jitted once per
+    cfg; ``m`` and ``cp`` are traced, so grain/Cp sweeps never retrace."""
 
     def body(i, tr):
         iter_keys = jax.vmap(lambda tk: jax.random.fold_in(tk, i))(task_keys)
-        return sync_iteration(tr, root_board, cfg, iter_keys, active)
+        return sync_iteration(tr, root_board, cfg, cp, iter_keys, active)
 
     return jax.lax.fori_loop(0, m, body, tree)
 
@@ -301,6 +419,7 @@ def gscpm_search(board: jnp.ndarray, to_move: int, cfg: GSCPMConfig,
     schedule = sched.make_schedule(
         cfg.n_playouts, cfg.n_tasks, cfg.n_workers, cfg.scheduler)
 
+    cp = jnp.asarray(cfg.cp, jnp.float32)
     t0 = time.perf_counter()
     playouts = 0
     masked_lane_iters = 0
@@ -308,7 +427,7 @@ def gscpm_search(board: jnp.ndarray, to_move: int, cfg: GSCPMConfig,
         task_keys = fold_task_keys(key, jnp.asarray(rnd.task_ids, dtype=jnp.int32))
         active = jnp.asarray(rnd.active)
         tree = run_chunk(tree, board, cfg, task_keys, active,
-                         jnp.asarray(rnd.m, dtype=jnp.int32))
+                         jnp.asarray(rnd.m, dtype=jnp.int32), cp)
         playouts += int(rnd.active.sum()) * rnd.m
         masked_lane_iters += int((~rnd.active).sum()) * rnd.m
     jax.block_until_ready(tree.visits)

@@ -55,15 +55,17 @@ from repro.core.tree import (
 # ----------------------------------------------------------- forest chunk ----
 def _forest_chunk(forest: Tree, boards: jnp.ndarray, cfg: GSCPMConfig,
                   task_keys: jnp.ndarray, active: jnp.ndarray,
-                  m: jnp.ndarray) -> Tree:
+                  m: jnp.ndarray, cp) -> Tree:
     """`gscpm.run_chunk` vmapped over the ensemble axis — one program for E
-    trees. All members share the round's grain `m`; per-member RNG streams
-    keep their searches decorrelated."""
+    trees. All members share the round's grain `m` and traced ``cp``;
+    per-member RNG streams keep their searches decorrelated. The batched
+    descent's ``ops.uct_select`` tile composes with this vmap (a leading E
+    axis on the (W, C) tiles — one fused (E·W, C) selection per level)."""
 
     def one_tree(tree, board, keys, act):
         def body(i, tr):
             iter_keys = jax.vmap(lambda tk: jax.random.fold_in(tk, i))(keys)
-            return sync_iteration(tr, board, cfg, iter_keys, act)
+            return sync_iteration(tr, board, cfg, cp, iter_keys, act)
 
         return jax.lax.fori_loop(0, m, body, tree)
 
@@ -233,6 +235,7 @@ def gscpm_search_batch(boards: jnp.ndarray, to_move, cfg: GSCPMConfig,
         cfg.n_playouts, cfg.n_tasks, cfg.n_workers, cfg.scheduler)
     state = init_sync_state(E, n_moves) if merge_every > 0 else None
 
+    cp = jnp.asarray(cfg.cp, jnp.float32)
     t0 = time.perf_counter()
     playouts_per_tree = 0
     n_syncs = 0
@@ -241,7 +244,7 @@ def gscpm_search_batch(boards: jnp.ndarray, to_move, cfg: GSCPMConfig,
             member_keys, jnp.asarray(rnd.task_ids, dtype=jnp.int32))
         active = jnp.tile(jnp.asarray(rnd.active)[None, :], (E, 1))
         forest = run_chunk_forest(forest, boards, cfg, task_keys, active,
-                                  jnp.asarray(rnd.m, dtype=jnp.int32))
+                                  jnp.asarray(rnd.m, dtype=jnp.int32), cp)
         playouts_per_tree += int(rnd.active.sum()) * rnd.m
         if merge_every > 0 and ((r + 1) % merge_every == 0
                                 or r == len(schedule) - 1):

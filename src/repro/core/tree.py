@@ -108,6 +108,26 @@ def add_vloss(tree: Tree, paths: jnp.ndarray, weights: jnp.ndarray,
     return tree._replace(vloss=vloss)
 
 
+def child_stat_tile(tree: Tree, nodes: jnp.ndarray):
+    """Gather the child statistics of a (W,) node batch as (W, C) tiles.
+
+    Returns ``(safe, valid, wins, visits, vloss, parent_total)``: ``safe``
+    holds child ids with invalid slots redirected to the PAD row (whose
+    stats are all zero), ``valid`` masks real slots, and ``parent_total`` is
+    each node's visits + virtual loss. This is the gather feeding one
+    level-synchronous ``kernels.ops.uct_select`` call — all W lanes of a
+    descent score one tree level in a single (W, C) tile (DESIGN.md §11).
+    """
+    C = tree.max_children
+    cap = tree.cap
+    slots = tree.children[nodes]                                   # (W, C)
+    valid = jnp.arange(C, dtype=jnp.int32)[None, :] < tree.n_children[nodes][:, None]
+    safe = jnp.where(valid, slots, cap)
+    parent_total = tree.visits[nodes] + tree.vloss[nodes]          # (W,)
+    return (safe, valid, tree.wins[safe], tree.visits[safe],
+            tree.vloss[safe], parent_total)
+
+
 def best_child(tree: Tree) -> jnp.ndarray:
     """Most-visited root child's move (the paper's final move selection)."""
     slots = tree.children[0]  # (max_children,)

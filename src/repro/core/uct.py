@@ -7,7 +7,10 @@ exploration bonus), diversifying simultaneous selections — the batched
 analogue of the lock contention the paper's threads experience.
 
 This is the pure-jnp reference; `repro.kernels.uct_select` is the Pallas twin
-used on TPU (validated against this module in tests/test_kernels_uct.py).
+used on TPU (validated against this module in tests/test_kernels.py). The
+search hot path reaches both through ``repro.kernels.ops.uct_select``, which
+scores a whole (W, C) level tile at once (DESIGN.md §11); ``cp`` may be a
+traced scalar everywhere in this module, so sweeping it never recompiles.
 """
 
 from __future__ import annotations
@@ -18,13 +21,13 @@ NEG_INF = -jnp.inf
 
 
 def uct_scores(wins: jnp.ndarray, visits: jnp.ndarray, vloss: jnp.ndarray,
-               parent_visits: jnp.ndarray, cp: float,
+               parent_visits: jnp.ndarray, cp,
                valid: jnp.ndarray) -> jnp.ndarray:
     """Vectorized UCT over child slots.
 
     wins/visits/vloss: (..., C) child stats; parent_visits: (...,) scalar per
-    row; valid: (..., C) bool. Unvisited children get +inf (explored first),
-    invalid slots get -inf.
+    row; valid: (..., C) bool; cp: python float or traced 0-d array.
+    Unvisited children get +inf (explored first), invalid slots get -inf.
     """
     n_j = visits + vloss
     x_j = wins / jnp.maximum(n_j, 1.0)

@@ -1,9 +1,13 @@
 """Public jit'd wrappers over the Pallas kernels.
 
-``interpret`` defaults to auto: compiled on TPU, interpret-mode (pure
-Python execution of the kernel body) everywhere else — which is how this
-CPU container validates the kernels. Call sites (models/attention.py,
-core/gscpm.py) go through these wrappers only.
+``interpret`` defaults to auto. For ``flash_attention``/``rmsnorm`` that
+means compiled on TPU, interpret-mode (pure Python execution of the kernel
+body) everywhere else — which is how this CPU container validates them.
+``uct_select`` sits on the search hot path, so its auto mode never runs
+interpret-mode Pallas: compiled Pallas on TPU, the jitted jnp reference on
+every other backend (interpret mode remains available for validation via
+``interpret=True``). Call sites (models/attention.py, core/gscpm.py,
+serve/mcts_decode.py) go through these wrappers only.
 """
 
 from __future__ import annotations
@@ -12,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import uct_select as _us
 
@@ -35,10 +40,30 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return out.swapaxes(1, 2) if layout == "bshd" else out
 
 
-def uct_select(wins, visits, vloss, parent_total, valid, cp: float,
-               noise=None, interpret: bool | None = None):
+def uct_select(wins, visits, vloss, parent_total, valid, cp,
+               noise=None, lane_mask=None, interpret: bool | None = None):
+    """Batched UCT child selection — the search hot path's dispatch point.
+
+    interpret=None (the default) picks the fast path per backend: the
+    compiled Pallas kernel on TPU, the jitted jnp reference elsewhere
+    (interpret-mode Pallas executes the kernel body in pure Python — it is
+    a validation tool, never a serving/benchmark path). Pass interpret=True
+    to force the interpret-mode kernel for validation. ``cp`` is traced on
+    every path: sweeping it never recompiles.
+    """
+    if interpret is None and jax.default_backend() != "tpu":
+        return _jitted_ref_uct_select(wins, visits, vloss, parent_total,
+                                      valid, cp, noise, lane_mask)
     return _us.uct_select(wins, visits, vloss, parent_total, valid, cp,
-                          noise=noise, interpret=_auto_interpret(interpret))
+                          noise=noise, lane_mask=lane_mask,
+                          interpret=_auto_interpret(interpret))
+
+
+@jax.jit
+def _jitted_ref_uct_select(wins, visits, vloss, parent_total, valid, cp,
+                           noise, lane_mask):
+    return _ref.uct_select(wins, visits, vloss, parent_total, valid, cp,
+                           noise=noise, lane_mask=lane_mask)
 
 
 def rmsnorm(x, w, eps: float = 1e-5, interpret: bool | None = None):

@@ -34,9 +34,16 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 
 def uct_select(wins: jnp.ndarray, visits: jnp.ndarray, vloss: jnp.ndarray,
                parent_total: jnp.ndarray, valid: jnp.ndarray,
-               cp: float, noise: jnp.ndarray | None = None) -> jnp.ndarray:
-    """(W, C) child stats -> (W,) best child slot (paper eq. 1 + tie-break)."""
+               cp, noise: jnp.ndarray | None = None,
+               lane_mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """(W, C) child stats -> (W,) best child slot (paper eq. 1 + tie-break).
+
+    ``cp`` may be a traced scalar; ``lane_mask`` (W,) bool marks live lanes
+    (a masked row is all-invalid and deterministically yields slot 0).
+    """
     from repro.core.uct import select_child, uct_scores
+    if lane_mask is not None:
+        valid = valid & lane_mask[..., None]
     scores = uct_scores(wins, visits, vloss, parent_total, cp, valid)
     return select_child(scores, noise).astype(jnp.int32)
 

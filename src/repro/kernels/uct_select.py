@@ -8,9 +8,15 @@ one pass over VMEM-resident stats.
     UCT(j) = w_j/n_j + Cp * sqrt(ln(n_parent)/n_j)        (paper eq. 1)
 
 with virtual loss folded into n_j, unvisited-first semantics (score 1e30),
-invalid-slot masking (-1e30), and bounded tie-break noise — bit-for-bit the
-same selection as ``repro.core.uct`` (tests sweep W/C/dtype and compare the
-chosen indices against the oracle).
+invalid-slot masking (-1e30), done-lane masking (a finished lane's row is
+all-invalid, so its pick is slot 0 and the caller holds it in place), and
+bounded tie-break noise — bit-for-bit the same selection as
+``repro.core.uct`` (tests sweep W/C/dtype and compare the chosen indices
+against the oracle).
+
+``cp`` is a *traced* scalar operand (a (1, 1) tile broadcast to every grid
+step), not a static argument: sweeping Cp across an ablation grid reuses one
+compiled kernel (the repo's "knobs traced ⇒ zero recompiles" rule).
 
 Tiling: grid over W blocks; child axis padded to the 128-lane boundary and
 kept whole per tile (C <= a few hundred for Hex/LM decode — one tile row).
@@ -27,12 +33,13 @@ from jax.experimental import pallas as pl
 BIG = 1e30
 
 
-def _uct_kernel(wins_ref, visits_ref, vloss_ref, ptot_ref, valid_ref,
-                noise_ref, out_ref, *, cp: float):
+def _uct_kernel(cp_ref, wins_ref, visits_ref, vloss_ref, ptot_ref, valid_ref,
+                noise_ref, out_ref):
     wins = wins_ref[...].astype(jnp.float32)
     n_j = visits_ref[...].astype(jnp.float32) + vloss_ref[...].astype(jnp.float32)
     valid = valid_ref[...] > 0.5
     noise = noise_ref[...].astype(jnp.float32)
+    cp = cp_ref[0, 0]
 
     x_j = wins / jnp.maximum(n_j, 1.0)
     n_p = jnp.maximum(ptot_ref[...].astype(jnp.float32), 1.0)   # (bw, 1)
@@ -43,15 +50,23 @@ def _uct_kernel(wins_ref, visits_ref, vloss_ref, ptot_ref, valid_ref,
     out_ref[...] = jnp.argmax(score, axis=1, keepdims=True).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("cp", "block_w", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
 def uct_select(wins: jnp.ndarray, visits: jnp.ndarray, vloss: jnp.ndarray,
-               parent_total: jnp.ndarray, valid: jnp.ndarray, cp: float,
-               noise: jnp.ndarray | None = None, block_w: int = 128,
+               parent_total: jnp.ndarray, valid: jnp.ndarray, cp,
+               noise: jnp.ndarray | None = None,
+               lane_mask: jnp.ndarray | None = None, block_w: int = 128,
                interpret: bool = False) -> jnp.ndarray:
-    """wins/visits/vloss/valid: (W, C); parent_total: (W,). Returns (W,) i32."""
+    """wins/visits/vloss/valid: (W, C); parent_total: (W,). Returns (W,) i32.
+
+    ``cp`` is traced (python float or 0-d array both hit one compile).
+    ``lane_mask`` (W,) bool marks live lanes; a False row is fully invalid
+    and deterministically selects slot 0 (its caller holds the lane anyway).
+    """
     W, C = wins.shape
     if noise is None:
         noise = jnp.zeros((W, C), jnp.float32)
+    if lane_mask is not None:
+        valid = valid & lane_mask[:, None]
 
     bw = min(block_w, W)
     Wp = -(-W // bw) * bw
@@ -66,11 +81,13 @@ def uct_select(wins: jnp.ndarray, visits: jnp.ndarray, vloss: jnp.ndarray,
     noise_p = padWC(noise)
     ptot_p = jnp.pad(parent_total.astype(jnp.float32), (0, Wp - W),
                      constant_values=1.0).reshape(Wp, 1)
+    cp_arr = jnp.asarray(cp, jnp.float32).reshape(1, 1)
 
     out = pl.pallas_call(
-        functools.partial(_uct_kernel, cp=cp),
+        _uct_kernel,
         grid=(Wp // bw,),
         in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
             pl.BlockSpec((bw, Cp_), lambda i: (i, 0)),
             pl.BlockSpec((bw, Cp_), lambda i: (i, 0)),
             pl.BlockSpec((bw, Cp_), lambda i: (i, 0)),
@@ -81,5 +98,5 @@ def uct_select(wins: jnp.ndarray, visits: jnp.ndarray, vloss: jnp.ndarray,
         out_specs=pl.BlockSpec((bw, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((Wp, 1), jnp.int32),
         interpret=interpret,
-    )(wins_p, visits_p, vloss_p, ptot_p, valid_p, noise_p)
+    )(cp_arr, wins_p, visits_p, vloss_p, ptot_p, valid_p, noise_p)
     return out[:W, 0]

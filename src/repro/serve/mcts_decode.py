@@ -10,8 +10,10 @@ Mapping of MCTS steps onto the LM:
 
 - *state* of a node at depth k = prompt ⊕ k tree tokens; the root holds the
   prefilled prompt KV cache (computed once, broadcast to the worker lanes).
-- *selection*: UCT descent over up-to-``branch`` children per node
-  (single-agent: a node's value is its mean rollout score).
+- *selection*: level-synchronous UCT descent over up-to-``branch`` children
+  per node — all W lanes step down the token tree in lockstep, one
+  ``kernels.ops.uct_select`` (W, C) tile per level, the same batched descent
+  as the Hex engine (single-agent: a node's value is its mean rollout score).
 - *expansion*: an untried token among the leaf's top-``branch`` logits;
   batch-deduped via the same prefix-sum allocator as Hex (token ids are
   legal `move`s since expand_batch orders (leaf, move) lexicographically).
@@ -47,26 +49,37 @@ import numpy as np
 
 from repro.core import scheduler as sched
 from repro.core import uct as uct_mod
-from repro.core.gscpm import fold_task_keys, expand_batch
+from repro.core.gscpm import (advance_paths, expand_batch, fold_task_keys,
+                              level_noise)
 from repro.core.root_parallel import fold_member_task_keys
-from repro.core.tree import NO_NODE, Tree, best_child, init_forest, init_tree
+from repro.core.tree import (NO_NODE, Tree, best_child, child_stat_tile,
+                             init_forest, init_tree)
+from repro.kernels import ops
 from repro.models import api
 from repro.models.common import ModelConfig
 
 
 @dataclasses.dataclass(frozen=True)
 class MCTSDecodeConfig:
-    n_playouts: int = 128
-    n_tasks: int = 16            # the grain dial: m = n_playouts / n_tasks
+    """Fields marked compare=False are excluded from hash/eq: ``cp`` reaches
+    the jitted chunks as a traced operand and the playout/task/scheduler
+    knobs only shape the host-side schedule (grain arrives as traced ``m``),
+    so sweeping them shares one compiled program. Traced code must never
+    read a compare=False field directly."""
+
+    n_playouts: int = dataclasses.field(default=128, compare=False)
+    # the grain dial: m = n_playouts / n_tasks
+    n_tasks: int = dataclasses.field(default=16, compare=False)
     n_workers: int = 8           # vmapped lanes through the LM
-    cp: float = 1.0
+    cp: float = dataclasses.field(default=1.0, compare=False)
     branch: int = 8              # children per node = top-k tokens
     max_depth: int = 6           # tree horizon in tokens
     rollout_len: int = 8
     temperature: float = 1.0
     select_noise: float = 1e-3
     tree_cap: int = 2048
-    scheduler: str = "fifo"
+    scheduler: str = dataclasses.field(default="fifo", compare=False)
+    descent: str = "batched"     # batched (level-synchronous) | scalar (oracle)
 
     @property
     def grain(self) -> int:
@@ -74,11 +87,17 @@ class MCTSDecodeConfig:
 
 
 # ------------------------------------------------------------- selection ----
-def select_token_path(tree: Tree, cfg: MCTSDecodeConfig, noise_key: jax.Array):
-    """UCT descent to a not-fully-expanded node (single-agent values)."""
+def select_token_path(tree: Tree, cfg: MCTSDecodeConfig, noise_key: jax.Array,
+                      cp=None):
+    """UCT descent to a not-fully-expanded node (single-agent values).
+
+    Per-lane scalar oracle for ``select_token_batch`` (``cp`` defaults to
+    cfg.cp for standalone use; the jitted chunks pass the traced operand).
+    """
     cap = tree.cap
     C = tree.max_children
     max_path = cfg.max_depth + 2
+    cp = cfg.cp if cp is None else cp
     path0 = jnp.full((max_path,), cap, dtype=jnp.int32).at[0].set(0)
 
     def cond(st):
@@ -94,7 +113,7 @@ def select_token_path(tree: Tree, cfg: MCTSDecodeConfig, noise_key: jax.Array):
         safe = jnp.where(valid, slots, cap)
         scores = uct_mod.uct_scores(
             tree.wins[safe], tree.visits[safe], tree.vloss[safe],
-            tree.visits[node] + tree.vloss[node], cfg.cp, valid)
+            tree.visits[node] + tree.vloss[node], cp, valid)
         noise = cfg.select_noise * jax.random.uniform(
             jax.random.fold_in(noise_key, depth), (C,))
         child = safe[uct_mod.select_child(scores, noise)]
@@ -105,6 +124,48 @@ def select_token_path(tree: Tree, cfg: MCTSDecodeConfig, noise_key: jax.Array):
     node, depth, path, _ = jax.lax.while_loop(
         cond, body, (jnp.int32(0), jnp.int32(0), path0, False))
     return path, depth, node
+
+
+def select_token_batch(tree: Tree, cfg: MCTSDecodeConfig, cp,
+                       noise_keys: jax.Array):
+    """Level-synchronous batched descent over the token tree.
+
+    The LM twin of ``gscpm.select_batch``: all W lanes step down in
+    lockstep, one ``kernels.ops.uct_select`` (W, C) tile per level, with
+    finished lanes masked and held. Bit-identical to
+    ``jax.vmap(select_token_path)`` under the same RNG schedule.
+    """
+    cap = tree.cap
+    C = tree.max_children
+    max_path = cfg.max_depth + 2
+    W = noise_keys.shape[0]
+
+    nodes0 = jnp.zeros((W,), jnp.int32)
+    depths0 = jnp.zeros((W,), jnp.int32)
+    paths0 = jnp.full((W, max_path), cap, dtype=jnp.int32).at[:, 0].set(0)
+    done0 = jnp.zeros((W,), bool)
+
+    def cond(st):
+        return ~st[-1].all()
+
+    def body(st):
+        nodes, depths, paths, done = st
+        n_kids = tree.n_children[nodes]
+        fully = (n_kids >= cfg.branch) & (depths < cfg.max_depth)
+        safe, valid, wins, visits, vloss, ptot = child_stat_tile(tree, nodes)
+        noise = level_noise(noise_keys, depths, C, cfg.select_noise)
+        picks = ops.uct_select(wins, visits, vloss, ptot, valid, cp,
+                               noise=noise, lane_mask=~done)
+        child = safe[jnp.arange(W), picks]
+        step = fully & ~done
+        nodes = jnp.where(step, child, nodes)
+        paths = advance_paths(paths, depths, child, step)
+        depths = jnp.where(step, depths + 1, depths)
+        return nodes, depths, paths, done | ~step
+
+    nodes, depths, paths, _ = jax.lax.while_loop(
+        cond, body, (nodes0, depths0, paths0, done0))
+    return paths, depths, nodes
 
 
 def path_tokens(tree: Tree, path: jnp.ndarray, max_depth: int) -> jnp.ndarray:
@@ -145,20 +206,25 @@ def backup_values(tree: Tree, paths: jnp.ndarray, values: jnp.ndarray,
 
 # ---------------------------------------------------------- one iteration ----
 def _iteration(tree: Tree, params, mcfg: ModelConfig, cfg: MCTSDecodeConfig,
-               cache, root_logits: jnp.ndarray, prompt_len,
+               cache, root_logits: jnp.ndarray, prompt_len, cp,
                iter_keys: jnp.ndarray, active: jnp.ndarray):
     """One batched GSCPM iteration of width W against the shared token tree.
 
     ``prompt_len`` is a traced i32 scalar (per-request under vmap), not a
     static python int — decode positions are computed from it, so one
     compiled program serves every prompt length up to the cache size.
+    ``cp`` is the traced exploration constant (never read from cfg here).
     """
     W = cfg.n_workers
     V = root_logits.shape[-1]
     prompt_len = jnp.asarray(prompt_len, jnp.int32)
 
-    sel = jax.vmap(lambda k: select_token_path(
-        tree, cfg, jax.random.fold_in(k, 0)))(iter_keys)
+    noise_keys = jax.vmap(lambda k: jax.random.fold_in(k, 0))(iter_keys)
+    if cfg.descent == "scalar":
+        sel = jax.vmap(lambda k: select_token_path(tree, cfg, k, cp)
+                       )(noise_keys)
+    else:
+        sel = select_token_batch(tree, cfg, cp, noise_keys)
     paths, depths, leaves = sel                                # (W, D), (W,), (W,)
     toks = jax.vmap(lambda p: path_tokens(tree, p, cfg.max_depth))(paths)
 
@@ -224,15 +290,16 @@ def _iteration(tree: Tree, params, mcfg: ModelConfig, cfg: MCTSDecodeConfig,
                    donate_argnums=(0, 4))
 def run_chunk(tree: Tree, params, mcfg: ModelConfig, cfg: MCTSDecodeConfig,
               cache, root_logits, prompt_len, task_keys, active,
-              m) -> tuple[Tree, Any]:
+              m, cp) -> tuple[Tree, Any]:
     """m sync iterations — one task grain per lane (jitted once per config;
-    ``prompt_len`` is traced, so prompt length changes do not recompile)."""
+    ``prompt_len``, ``m`` and ``cp`` are traced, so prompt length, grain and
+    Cp changes do not recompile)."""
 
     def body(i, carry):
         tree, cache = carry
         iter_keys = jax.vmap(lambda tk: jax.random.fold_in(tk, i))(task_keys)
         return _iteration(tree, params, mcfg, cfg, cache, root_logits,
-                          prompt_len, iter_keys, active)
+                          prompt_len, cp, iter_keys, active)
 
     return jax.lax.fori_loop(0, m, body, (tree, cache))
 
@@ -242,12 +309,14 @@ def run_chunk(tree: Tree, params, mcfg: ModelConfig, cfg: MCTSDecodeConfig,
                    donate_argnums=(0, 4))
 def run_chunk_batch(forest: Tree, params, mcfg: ModelConfig,
                     cfg: MCTSDecodeConfig, cache, root_logits, prompt_lens,
-                    task_keys, active, m, cache_axes_def) -> tuple[Tree, Any]:
+                    task_keys, active, m, cp, cache_axes_def
+                    ) -> tuple[Tree, Any]:
     """`run_chunk` vmapped over B concurrent requests — one jitted program.
 
     forest: B stacked trees; cache leaves carry a (B, W) split batch axis at
     each leaf's own position (``cache_axes_def``, hashable static arg);
-    root_logits (B, V); prompt_lens (B,); task_keys/active (B, W).
+    root_logits (B, V); prompt_lens (B,); task_keys/active (B, W); ``cp`` a
+    traced scalar shared by all requests.
     """
     cache_axes = jax.tree.unflatten(
         jax.tree.structure(cache), list(cache_axes_def))
@@ -257,7 +326,7 @@ def run_chunk_batch(forest: Tree, params, mcfg: ModelConfig,
             tr, ch = carry
             iter_keys = jax.vmap(
                 lambda tk: jax.random.fold_in(tk, i))(keys)
-            return _iteration(tr, params, mcfg, cfg, ch, rl, pl,
+            return _iteration(tr, params, mcfg, cfg, ch, rl, pl, cp,
                               iter_keys, act)
 
         return jax.lax.fori_loop(0, m, body, (tree, cache_b))
@@ -290,6 +359,7 @@ def mcts_decode_search(params, mcfg: ModelConfig, prompt: jnp.ndarray,
     schedule = sched.make_schedule(
         cfg.n_playouts, cfg.n_tasks, cfg.n_workers, cfg.scheduler)
 
+    cp = jnp.asarray(cfg.cp, jnp.float32)
     t0 = time.perf_counter()
     playouts = 0
     for rnd in schedule:
@@ -298,7 +368,7 @@ def mcts_decode_search(params, mcfg: ModelConfig, prompt: jnp.ndarray,
         tree, cache = run_chunk(tree, params, mcfg, cfg, cache, root_logits,
                                 jnp.asarray(prompt_len, jnp.int32),
                                 task_keys, active,
-                                jnp.asarray(rnd.m, jnp.int32))
+                                jnp.asarray(rnd.m, jnp.int32), cp)
         playouts += int(rnd.active.sum()) * rnd.m
     jax.block_until_ready(tree.visits)
     dt = time.perf_counter() - t0
@@ -372,6 +442,7 @@ def mcts_decode_search_batch(params, mcfg: ModelConfig, prompts: jnp.ndarray,
     schedule = sched.make_schedule(
         cfg.n_playouts, cfg.n_tasks, cfg.n_workers, cfg.scheduler)
 
+    cp = jnp.asarray(cfg.cp, jnp.float32)
     t0 = time.perf_counter()
     playouts_per_req = 0
     for rnd in schedule:
@@ -380,7 +451,7 @@ def mcts_decode_search_batch(params, mcfg: ModelConfig, prompts: jnp.ndarray,
         active = jnp.asarray(rnd.active)[None, :] & mask[:, None]   # (B, W)
         forest, cache = run_chunk_batch(
             forest, params, mcfg, cfg, cache, root_logits, lens,
-            task_keys, active, jnp.asarray(rnd.m, jnp.int32),
+            task_keys, active, jnp.asarray(rnd.m, jnp.int32), cp,
             cache_axes_def)
         playouts_per_req += int(rnd.active.sum()) * rnd.m
     jax.block_until_ready(forest.visits)

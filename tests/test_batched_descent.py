@@ -1,0 +1,212 @@
+"""Level-synchronous batched descent vs the per-lane scalar oracle.
+
+The tentpole contract (DESIGN.md §11): ``select_batch`` /
+``select_token_batch`` — all W lanes stepping down the tree in lockstep,
+one ``kernels.ops.uct_select`` (W, C) tile per level — must be bit-identical
+to ``jax.vmap(select_one)`` / ``jax.vmap(select_token_path)`` under the same
+RNG schedule, both per-descent and across whole searches; and sweeping the
+traced knobs (Cp, grain, scheduler) must never grow the jit caches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hex as hx
+from repro.core.gscpm import (GSCPMConfig, expand_batch, gscpm_search,
+                              run_chunk, select_batch, select_one)
+from repro.core.root_parallel import gscpm_search_batch
+from repro.core.tree import child_stat_tile, init_tree
+from repro.kernels import ops
+from repro.kernels import uct_select as _us
+from repro.serve.mcts_decode import (MCTSDecodeConfig, backup_values,
+                                     select_token_batch, select_token_path)
+
+
+def built_tree(size: int, key, n_playouts: int = 192):
+    """A mid-search Hex tree with real stats to descend."""
+    board = hx.empty_board(hx.HexSpec(size))
+    cfg = GSCPMConfig(board_size=size, n_playouts=n_playouts, n_tasks=8,
+                      n_workers=4, tree_cap=4096)
+    tree, _ = gscpm_search(board, 1, cfg, key)
+    return tree, board, hx.HexSpec(size)
+
+
+# ------------------------------------------------------- descent oracle ----
+@pytest.mark.parametrize("size", [5, 7])
+@pytest.mark.parametrize("W", [1, 4, 16])
+@pytest.mark.parametrize("noise_scale", [0.0, 1e-3])
+def test_select_batch_matches_vmapped_select_one(size, W, noise_scale):
+    tree, board, spec = built_tree(size, jax.random.PRNGKey(size))
+    keys = jax.random.split(jax.random.PRNGKey(100 + W), W)
+    cp = jnp.float32(1.0)
+    want = jax.vmap(
+        lambda k: select_one(tree, board, spec, cp, k, noise_scale))(keys)
+    got = select_batch(tree, board, spec, cp, keys, noise_scale)
+    for name, w, g in zip(("path", "depth", "leaf", "board", "n_empty"),
+                          want, got):
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(g),
+                                      err_msg=f"{name} diverged")
+
+
+@pytest.mark.parametrize("vl_rounds", [1, 3])
+@pytest.mark.parametrize("W,noise", [(4, 1e-3), (8, 0.0), (8, 1e-3)])
+def test_full_search_batched_equals_scalar(vl_rounds, W, noise):
+    """Whole searches — selection, expansion, playout, backup — produce
+    bit-identical trees whichever descent runs (same RNG schedule)."""
+    board = hx.empty_board(hx.HexSpec(5))
+    base = GSCPMConfig(board_size=5, n_playouts=128, n_tasks=8, n_workers=W,
+                       vl_rounds=vl_rounds, select_noise=noise,
+                       tree_cap=2048, descent="batched")
+    key = jax.random.PRNGKey(17)
+    t_b, s_b = gscpm_search(board, 1, base, key)
+    t_s, s_s = gscpm_search(board, 1,
+                            dataclasses.replace(base, descent="scalar"), key)
+    assert int(t_b.n_nodes) == int(t_s.n_nodes)
+    nn = int(t_b.n_nodes)
+    for f in ("parent", "move", "to_move", "n_children"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(t_b, f)[:nn]), np.asarray(getattr(t_s, f)[:nn]),
+            err_msg=f)
+    np.testing.assert_allclose(np.asarray(t_b.visits[:nn]),
+                               np.asarray(t_s.visits[:nn]))
+    np.testing.assert_allclose(np.asarray(t_b.wins[:nn]),
+                               np.asarray(t_s.wins[:nn]))
+    assert s_b["best_move"] == s_s["best_move"]
+
+
+def test_forest_vmap_composes_with_batched_descent():
+    """Root-parallel vmap over E members runs the batched descent unchanged:
+    each member's forest tree equals its own single-tree search."""
+    board = hx.empty_board(hx.HexSpec(5))
+    cfg = GSCPMConfig(board_size=5, n_playouts=64, n_tasks=4, n_workers=4,
+                      tree_cap=1024)
+    key = jax.random.PRNGKey(3)
+    forest, _ = gscpm_search_batch(board, 1, cfg, key, n_trees=2)
+    for e in range(2):
+        single, _ = gscpm_search(
+            board, 1, cfg, jax.random.fold_in(key, e))
+        np.testing.assert_allclose(np.asarray(forest.visits[e]),
+                                   np.asarray(single.visits))
+
+
+# ----------------------------------------------------- token-tree oracle ----
+def token_tree(cfg: MCTSDecodeConfig, seed: int):
+    """Synthetic token tree: dedup-expanded tokens + scored backups.
+
+    Proposals target distinct non-full leaves only (as ``propose_token``
+    guarantees in the real path), so ``branch`` is never exceeded.
+    """
+    tree = init_tree(cfg.tree_cap, cfg.branch, 1)
+    rng = np.random.default_rng(seed)
+    for i in range(6):
+        nn = int(tree.n_nodes)
+        nc = np.asarray(tree.n_children[:nn])
+        open_leaves = np.flatnonzero(nc < cfg.branch)
+        leaves = rng.choice(open_leaves, size=min(4, len(open_leaves)),
+                            replace=False).astype(np.int32)
+        W = len(leaves)
+        toks = rng.integers(1, 50, size=(W,)).astype(np.int32)
+        tree, new_ids = expand_batch(tree, jnp.asarray(leaves),
+                                     jnp.asarray(toks), jnp.ones((W,), bool))
+        paths = jnp.where(new_ids[:, None] < tree.cap,
+                          jnp.stack([jnp.zeros((W,), jnp.int32), new_ids], 1),
+                          tree.cap)
+        vals = jnp.asarray(rng.uniform(0.1, 1.0, size=(W,)), jnp.float32)
+        tree = backup_values(tree, paths, vals, jnp.ones((W,)))
+    return tree
+
+
+@pytest.mark.parametrize("W", [1, 4, 8])
+def test_select_token_batch_matches_oracle(W):
+    cfg = MCTSDecodeConfig(branch=4, max_depth=3, tree_cap=128)
+    tree = token_tree(cfg, seed=0)
+    keys = jax.random.split(jax.random.PRNGKey(W), W)
+    cp = jnp.float32(1.0)
+    want = jax.vmap(lambda k: select_token_path(tree, cfg, k, cp))(keys)
+    got = select_token_batch(tree, cfg, cp, keys)
+    for name, w, g in zip(("path", "depth", "leaf"), want, got):
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(g),
+                                      err_msg=f"{name} diverged")
+
+
+# ------------------------------------------------------------- gather op ----
+def test_child_stat_tile_matches_scalar_gather():
+    tree, _, _ = built_tree(5, jax.random.PRNGKey(1))
+    nodes = jnp.asarray([0, 1, int(tree.n_nodes) - 1, 0], jnp.int32)
+    safe, valid, wins, visits, vloss, ptot = child_stat_tile(tree, nodes)
+    C = tree.max_children
+    for i, n in enumerate(np.asarray(nodes)):
+        nk = int(tree.n_children[n])
+        v = np.arange(C) < nk
+        np.testing.assert_array_equal(np.asarray(valid[i]), v)
+        s = np.where(v, np.asarray(tree.children[n]), tree.cap)
+        np.testing.assert_array_equal(np.asarray(safe[i]), s)
+        np.testing.assert_allclose(np.asarray(wins[i]),
+                                   np.asarray(tree.wins)[s])
+        np.testing.assert_allclose(
+            np.asarray(ptot[i]),
+            float(tree.visits[n]) + float(tree.vloss[n]))
+
+
+# --------------------------------------------------------- compile counts ----
+def test_cp_grain_scheduler_sweeps_do_not_retrace():
+    """The fig7/ablation sweep contract: Cp, grain and scheduler are traced
+    or host-only knobs, so the whole grid shares ONE compiled chunk."""
+    board = hx.empty_board(hx.HexSpec(5))
+    key = jax.random.PRNGKey(0)
+    gscpm_search(board, 1, GSCPMConfig(board_size=5, n_playouts=32,
+                                       n_tasks=4, n_workers=4,
+                                       tree_cap=512), key)
+    before = run_chunk._cache_size()
+    for cp in (0.3, 1.0, 2.4):
+        for n_tasks in (2, 4, 16):
+            for sched in ("fifo", "rebalance"):
+                cfg = GSCPMConfig(board_size=5, n_playouts=32,
+                                  n_tasks=n_tasks, n_workers=4,
+                                  tree_cap=512, cp=cp, scheduler=sched)
+                gscpm_search(board, 1, cfg, key)
+    assert run_chunk._cache_size() == before
+
+
+def test_kernel_jit_cp_is_traced():
+    """The Pallas kernel itself never recompiles across Cp values."""
+    W, C = 8, 16
+    z = jnp.zeros((W, C))
+    valid = jnp.ones((W, C), bool)
+    ptot = jnp.ones((W,))
+    _us.uct_select(z, z, z, ptot, valid, jnp.float32(1.0), interpret=True)
+    before = _us.uct_select._cache_size()
+    for cp in (0.25, 0.7, 3.0):
+        _us.uct_select(z, z, z, ptot, valid, jnp.float32(cp), interpret=True)
+    assert _us.uct_select._cache_size() == before
+
+
+# ------------------------------------------------------- done-lane masking ----
+def test_lane_mask_holds_done_lanes():
+    """A masked lane's row is fully invalid -> deterministic slot 0; live
+    lanes' picks are unaffected by other lanes' masks."""
+    key = jax.random.PRNGKey(2)
+    ks = jax.random.split(key, 4)
+    W, C = 6, 8
+    visits = jnp.round(jax.random.uniform(ks[0], (W, C)) * 9)
+    wins = jnp.round(jax.random.uniform(ks[1], (W, C)) * visits)
+    valid = jax.random.uniform(ks[2], (W, C)) > 0.3
+    ptot = jnp.maximum(visits.sum(-1), 1.0)
+    mask = jnp.asarray([True, False, True, False, True, True])
+    cp = jnp.float32(1.0)
+    free = ops.uct_select(wins, visits, jnp.zeros((W, C)), ptot, valid, cp)
+    held = ops.uct_select(wins, visits, jnp.zeros((W, C)), ptot, valid, cp,
+                          lane_mask=mask)
+    np.testing.assert_array_equal(np.asarray(held)[np.asarray(mask)],
+                                  np.asarray(free)[np.asarray(mask)])
+    assert (np.asarray(held)[~np.asarray(mask)] == 0).all()
+    # pallas kernel agrees on the masked tile
+    interp = ops.uct_select(wins, visits, jnp.zeros((W, C)), ptot, valid, cp,
+                            lane_mask=mask, interpret=True)
+    np.testing.assert_array_equal(np.asarray(held), np.asarray(interp))

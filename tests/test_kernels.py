@@ -60,7 +60,8 @@ def test_flash_matches_model_sdpa():
 @pytest.mark.parametrize("W,C", [(7, 11), (64, 121), (200, 121), (16, 300),
                                  (128, 128), (1, 5)])
 @pytest.mark.parametrize("noise", [False, True])
-def test_uct_select(W, C, noise):
+def test_uct_select_kernel_vs_oracle(W, C, noise):
+    """Interpret-mode Pallas kernel (validation-only path) == jnp oracle."""
     ks = jax.random.split(jax.random.fold_in(KEY, W * C + noise), 5)
     visits = jnp.round(jax.random.uniform(ks[0], (W, C)) * 10)
     wins = jnp.round(jax.random.uniform(ks[1], (W, C)) * visits)
@@ -68,9 +69,31 @@ def test_uct_select(W, C, noise):
     valid = jax.random.uniform(ks[3], (W, C)) > 0.3
     ptot = jnp.maximum(visits.sum(-1), 1.0)
     nz = 1e-3 * jax.random.uniform(ks[4], (W, C)) if noise else None
-    got = ops.uct_select(wins, visits, vloss, ptot, valid, 1.0, noise=nz)
+    got = ops.uct_select(wins, visits, vloss, ptot, valid, 1.0, noise=nz,
+                         interpret=True)
     want = ref.uct_select(wins, visits, vloss, ptot, valid, 1.0, noise=nz)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_uct_select_dispatch_agrees_with_kernel():
+    """The auto dispatch the search hot path hits (compiled Pallas on TPU,
+    jitted jnp reference elsewhere) selects the same children as the
+    interpret-mode Pallas kernel — an independent implementation on every
+    backend, so this is non-vacuous on the CPU CI host too — with cp
+    traced and a lane mask applied."""
+    ks = jax.random.split(KEY, 4)
+    W, C = 32, 24
+    visits = jnp.round(jax.random.uniform(ks[0], (W, C)) * 10)
+    wins = jnp.round(jax.random.uniform(ks[1], (W, C)) * visits)
+    valid = jax.random.uniform(ks[2], (W, C)) > 0.3
+    ptot = jnp.maximum(visits.sum(-1), 1.0)
+    mask = jax.random.uniform(ks[3], (W,)) > 0.25
+    for cp in (jnp.float32(0.5), jnp.float32(1.7)):
+        got = ops.uct_select(wins, visits, jnp.zeros((W, C)), ptot, valid,
+                             cp, lane_mask=mask)
+        kernel = ops.uct_select(wins, visits, jnp.zeros((W, C)), ptot, valid,
+                                cp, lane_mask=mask, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(kernel))
 
 
 @settings(max_examples=20, deadline=None)
