@@ -27,7 +27,11 @@ from repro.core.mcts import uct_search
 def run(n_playouts: int = 2048, n_workers: int = 16, board_size: int = 9,
         task_sweep=(4, 8, 16, 32, 64, 128, 256, 512),
         schedulers=("fifo", "rebalance", "one_per_core"),
-        seed: int = 0) -> dict:
+        seed: int = 0, repeats: int = 3) -> dict:
+    """Each point reports the best of ``repeats`` timed searches (min-time,
+    the same convention as ``benchmarks.common.timed``): the harness hosts
+    are shared and noisy, and a single timed search per point made the
+    recorded curves swing ~2x run-to-run."""
     spec = hx.HexSpec(board_size)
     board = hx.empty_board(spec)
     key = jax.random.key(seed)
@@ -35,9 +39,11 @@ def run(n_playouts: int = 2048, n_workers: int = 16, board_size: int = 9,
 
     # sequential baseline (warm-up excluded, as in the paper)
     uct_search(board, 1, 64, key, board_size=board_size, tree_cap=tree_cap)
-    _, seq = uct_search(board, 1, n_playouts, key, board_size=board_size,
-                        tree_cap=tree_cap)
-    seq_rate = seq["playouts_per_s"]
+    seq_rate = 0.0
+    for _ in range(repeats):
+        _, seq = uct_search(board, 1, n_playouts, key, board_size=board_size,
+                            tree_cap=tree_cap)
+        seq_rate = max(seq_rate, seq["playouts_per_s"])
 
     curves: dict[str, dict] = {}
     for sched in schedulers:
@@ -49,18 +55,24 @@ def run(n_playouts: int = 2048, n_workers: int = 16, board_size: int = 9,
                 n_tasks=n_tasks, n_workers=n_workers, tree_cap=tree_cap,
                 scheduler=sched)
             gscpm_search(board, 1, cfg, key)          # warm-up/compile
-            _, st = gscpm_search(board, 1, cfg, key)
+            best = None
+            for _ in range(repeats):
+                _, st = gscpm_search(board, 1, cfg, key)
+                if best is None or (st["playouts_per_s"]
+                                    > best["playouts_per_s"]):
+                    best = st
             pts[str(n_tasks)] = {
-                "speedup": st["playouts_per_s"] / seq_rate,
-                "playouts_per_s": st["playouts_per_s"],
-                "masked_lane_fraction": st["masked_lane_fraction"],
-                "tree_nodes": st["tree_nodes"],
+                "speedup": best["playouts_per_s"] / seq_rate,
+                "playouts_per_s": best["playouts_per_s"],
+                "masked_lane_fraction": best["masked_lane_fraction"],
+                "tree_nodes": best["tree_nodes"],
             }
         curves[sched] = pts
     return {
         "n_playouts": n_playouts,
         "n_workers": n_workers,
         "board": f"{board_size}x{board_size}",
+        "repeats": repeats,
         "sequential_playouts_per_s": seq_rate,
         "curves": curves,
     }

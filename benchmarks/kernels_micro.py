@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import hex as hx
 from repro.kernels import ops, ref
 
 from benchmarks.common import timed
@@ -77,6 +78,61 @@ def run(seed: int = 0) -> dict:
             "selections_per_s": W / t,
         }
     out["uct_select"] = us
+
+    # hex winner / playout — the playout phase's two formulations (O(diam)
+    # flood fill vs O(log n) pointer doubling), scalar-vmap vs batched, and
+    # the fused playout stage. The interpret-mode Pallas kernel run is
+    # validation-only; the timed paths are the real dispatch
+    # (pointer-doubling Pallas on TPU, batched flood fill elsewhere) and
+    # the jitted alternatives it was chosen against.
+    hw = {}
+    for (size, W) in [(9, 16), (11, 16), (11, 128)]:
+        spec = hx.HexSpec(size)
+        ks = jax.random.split(jax.random.fold_in(key, 7000 + size * W), W)
+        empty = jnp.tile(hx.empty_board(spec)[None], (W, 1))
+        fill_j = jax.jit(lambda b, k: hx.random_fill_batch(b, 1, k, spec))
+        filled = jax.block_until_ready(fill_j(empty, ks))
+
+        entry = {"dispatch": "pallas_compiled" if ON_TPU
+                 else "jnp_flood_batch"}
+        if W <= 16:  # interpret-mode Pallas is pure Python — keep it small
+            kern = ops.hex_winner(filled, size, interpret=True)
+            pj = ref.hex_winner(filled, size)
+            entry["kernel_interpret_agreement_validation_only"] = float(
+                (np.asarray(kern) == np.asarray(pj)).mean())
+
+        disp = lambda b: ops.hex_winner(b, size)
+        pj_j = jax.jit(lambda b: ref.hex_winner(b, size))
+        flood_v = jax.jit(jax.vmap(lambda b: hx.winner(b, spec)))
+        po_b = jax.jit(lambda b, k: hx.playout_batch(b, 1, k, spec))
+        po_v = jax.jit(jax.vmap(
+            lambda b, k: hx.playout(b, jnp.int32(1), k, spec)))
+        for f, args in ((disp, (filled,)), (pj_j, (filled,)),
+                        (flood_v, (filled,)), (po_b, (empty, ks)),
+                        (po_v, (empty, ks))):
+            jax.block_until_ready(f(*args))
+        t_disp, _ = timed(lambda: jax.block_until_ready(disp(filled)),
+                          repeats=5)
+        t_pj, _ = timed(lambda: jax.block_until_ready(pj_j(filled)),
+                        repeats=5)
+        t_flood, _ = timed(lambda: jax.block_until_ready(flood_v(filled)),
+                           repeats=5)
+        t_pob, _ = timed(lambda: jax.block_until_ready(po_b(empty, ks)),
+                         repeats=5)
+        t_pov, _ = timed(lambda: jax.block_until_ready(po_v(empty, ks)),
+                         repeats=5)
+        entry.update({
+            "winner_dispatch_s": t_disp,
+            "winner_pointer_doubling_jnp_s": t_pj,
+            "winner_floodfill_vmap_s": t_flood,
+            "winner_eval_per_s": W / t_disp,
+            "playout_batched_s": t_pob,
+            "playout_vmap_s": t_pov,
+            "playout_eval_per_s": W / t_pob,
+            "playout_batched_speedup_vs_vmap": t_pov / t_pob,
+        })
+        hw[f"{size}x{size}W{W}"] = entry
+    out["hex_winner"] = hw
 
     # rmsnorm
     rn = {}

@@ -109,6 +109,15 @@ def write_mcts_trajectory(results: dict) -> str | None:
     }
     if "tpfifo" in results:
         payload["tpfifo_best_speedup"] = results["tpfifo"]["best_speedup"]
+    km = results.get("kernels_micro")
+    if km and "hex_winner" in km:
+        # fused playout-evaluation throughput per (board, W) case + the
+        # headline (best batched rate) — the playout-phase twin of
+        # best_playouts_per_s
+        cases = {k: v["playout_eval_per_s"]
+                 for k, v in km["hex_winner"].items()}
+        payload["playout_eval_per_s"] = max(cases.values())
+        payload["playout_eval_per_s_by_case"] = cases
     path = os.path.join(os.path.dirname(__file__), "..", "BENCH_mcts.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)

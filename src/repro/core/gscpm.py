@@ -12,8 +12,11 @@ shared tree. Here (DESIGN.md §2):
   in lockstep, one ``kernels.ops.uct_select`` (W, C) tile per level, the
   TPU twin of the paper's 512-bit VPU-vectorized UCT loop (DESIGN.md §11) —
   then dedup-expands the proposed (leaf, move) pairs with prefix-sum slot
-  allocation (the paper's atomic child index), runs W playouts, and
-  scatter-adds the results along the W paths (the paper's atomic w_j/n_j);
+  allocation (the paper's atomic child index), evaluates W playouts as ONE
+  fused (W, cells) stage — one batched place, one sort-free parity fill,
+  one connectivity solve (``hex.playout_batch`` →
+  ``kernels.ops.hex_winner``, DESIGN.md §12) — and scatter-adds the
+  results along the W paths (the paper's atomic w_j/n_j);
 - per-task RNG streams come from ``fold_in`` (the paper's per-task MKL
   streams).
 
@@ -78,6 +81,7 @@ class GSCPMConfig:
     # fifo | rebalance | one_per_core | sequential
     scheduler: str = dataclasses.field(default="fifo", compare=False)
     descent: str = "batched"        # batched (level-synchronous) | scalar (oracle)
+    playout: str = "batched"        # batched (fused (W, cells)) | scalar (oracle)
 
     @property
     def spec(self) -> hx.HexSpec:
@@ -234,8 +238,10 @@ def propose_move(tree: Tree, leaf: jnp.ndarray, board: jnp.ndarray,
     tried_moves = jnp.where(valid, tree.move[jnp.where(valid, slots, cap)], n_cells)
     tried = jnp.zeros((n_cells + 1,), dtype=bool).at[tried_moves].set(True)[:n_cells]
     untried = legal & ~tried
-    g = jax.random.gumbel(key, (n_cells,))
-    mv = jnp.argmax(jnp.where(untried, g, -jnp.inf)).astype(jnp.int32)
+    # argmax of iid uniforms over the untried set IS a uniform choice — the
+    # gumbel transform (two transcendental maps) buys nothing here
+    u = jax.random.uniform(key, (n_cells,))
+    mv = jnp.argmax(jnp.where(untried, u, -1.0)).astype(jnp.int32)
     return jnp.where(untried.any(), mv, jnp.int32(NO_NODE))
 
 
@@ -313,7 +319,10 @@ def sync_iteration(tree: Tree, root_board: jnp.ndarray, cfg: GSCPMConfig,
     ``cp`` is the traced exploration constant (never read from cfg here —
     see GSCPMConfig). Selection runs the level-synchronous batched descent
     by default; ``cfg.descent == "scalar"`` keeps the per-lane while-loop
-    oracle (same RNG schedule, bit-identical trees).
+    oracle (same RNG schedule, bit-identical trees). Likewise the playout
+    phase defaults to the fused (W, cells) evaluation and
+    ``cfg.playout == "scalar"`` keeps the per-lane flood-fill oracle
+    (bit-identical winners under the same RNG schedule).
     """
     spec = cfg.spec
     W = cfg.n_workers
@@ -378,14 +387,28 @@ def sync_iteration(tree: Tree, root_board: jnp.ndarray, cfg: GSCPMConfig,
         jnp.where(expanded[:, None], new_ids[:, None], tree.cap),
         paths)
 
-    def one_playout(board, leaf, mv, k):
-        mover = tree.to_move[leaf]
-        b2 = jnp.where(mv >= 0, hx.place(board, jnp.maximum(mv, 0), mover), board)
-        nxt = jnp.where(mv >= 0, 3 - mover, mover)
-        filled = hx.random_fill(b2, nxt, k, spec)
-        return hx.winner(filled, spec)
+    if cfg.playout == "scalar":
+        # per-lane oracle: W interleaved flood-fill playouts under vmap
+        def one_playout(board, leaf, mv, k):
+            mover = tree.to_move[leaf]
+            b2 = jnp.where(mv >= 0, hx.place(board, jnp.maximum(mv, 0), mover),
+                           board)
+            nxt = jnp.where(mv >= 0, 3 - mover, mover)
+            filled = hx.random_fill(b2, nxt, k, spec)
+            return hx.winner(filled, spec)
 
-    winners = jax.vmap(one_playout)(boards, leaves, moves, po_keys)
+        winners = jax.vmap(one_playout)(boards, leaves, moves, po_keys)
+    else:
+        # fused leaf evaluation: one batched place, one parity fill, one
+        # connectivity solve for all W lanes (bit-identical winners to the
+        # oracle above — tests/test_hex_batch.py)
+        movers = tree.to_move[leaves]
+        do = moves >= 0
+        placed = boards.at[jnp.arange(W), jnp.maximum(moves, 0)].set(
+            movers.astype(jnp.int8))
+        b2 = jnp.where(do[:, None], placed, boards)
+        nxt = jnp.where(do, 3 - movers, movers)
+        winners = hx.playout_batch(b2, nxt, po_keys, spec)
     return backup_paths(tree, paths, winners, active.astype(jnp.float32))
 
 

@@ -50,12 +50,12 @@ def uct_iteration(tree: Tree, root_board: jnp.ndarray, spec: hx.HexSpec,
     )
     path = path.at[depth + 1].set(jnp.where(did, new, tree.cap))
 
-    # ---- playout ----
+    # ---- playout (the batched evaluation stage at width 1: same fill RNG,
+    # winner via the per-backend ops.hex_winner dispatch) ----
     mover = tree.to_move[leaf]
     b2 = jnp.where(expanding, hx.place(board, jnp.maximum(mv, 0), mover), board)
     nxt = jnp.where(expanding, 3 - mover, mover)
-    filled = hx.random_fill(b2, nxt, k_po, spec)
-    w = hx.winner(filled, spec)
+    w = hx.playout_batch(b2[None], nxt[None], k_po[None], spec)[0]
 
     # ---- scalar backup (the paper's atomic w_j / n_j walk) ----
     def body(i, t):

@@ -60,7 +60,11 @@ def _forest_chunk(forest: Tree, boards: jnp.ndarray, cfg: GSCPMConfig,
     trees. All members share the round's grain `m` and traced ``cp``;
     per-member RNG streams keep their searches decorrelated. The batched
     descent's ``ops.uct_select`` tile composes with this vmap (a leading E
-    axis on the (W, C) tiles — one fused (E·W, C) selection per level)."""
+    axis on the (W, C) tiles — one fused (E·W, C) selection per level), and
+    so does the fused playout stage: the whole forest's leaf evaluations
+    become one (E·W, cells) fill + pointer-doubling connectivity solve with
+    a single convergence loop (``hex.playout_batch`` under vmap,
+    DESIGN.md §12) instead of E·W interleaved flood-fill while-loops."""
 
     def one_tree(tree, board, keys, act):
         def body(i, tr):

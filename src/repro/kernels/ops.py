@@ -3,19 +3,23 @@
 ``interpret`` defaults to auto. For ``flash_attention``/``rmsnorm`` that
 means compiled on TPU, interpret-mode (pure Python execution of the kernel
 body) everywhere else — which is how this CPU container validates them.
-``uct_select`` sits on the search hot path, so its auto mode never runs
-interpret-mode Pallas: compiled Pallas on TPU, the jitted jnp reference on
-every other backend (interpret mode remains available for validation via
-``interpret=True``). Call sites (models/attention.py, core/gscpm.py,
-serve/mcts_decode.py) go through these wrappers only.
+``uct_select`` and ``hex_winner`` sit on the search hot path, so their auto
+mode never runs interpret-mode Pallas: compiled Pallas on TPU, the jitted
+jnp reference on every other backend (interpret mode remains available for
+validation via ``interpret=True``). Call sites (models/attention.py,
+core/gscpm.py, core/hex.py, serve/mcts_decode.py) go through these
+wrappers only.
 """
 
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import hex_winner as _hw
 from repro.kernels import ref as _ref
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import uct_select as _us
@@ -64,6 +68,33 @@ def _jitted_ref_uct_select(wins, visits, vloss, parent_total, valid, cp,
                            noise, lane_mask):
     return _ref.uct_select(wins, visits, vloss, parent_total, valid, cp,
                            noise=noise, lane_mask=lane_mask)
+
+
+def hex_winner(boards, size: int, interpret: bool | None = None):
+    """Batched Hex winner evaluation — the playout phase's dispatch point.
+
+    boards: (W, size*size) FILLED boards; returns (W,) int8 winners.
+    interpret=None (the default) picks the fast path per backend exactly
+    like ``uct_select``: the compiled pointer-doubling Pallas kernel on
+    TPU; elsewhere the jitted batched flood fill — on scalar-ish hardware
+    a handful of extra boolean dilation steps are cheaper than the
+    pointer-doubling round's gathers, so the O(log n) formulation is the
+    *vector-hardware* fast path, not a universal one (DESIGN.md §12,
+    measured in benchmarks/kernels_micro.py). Pass interpret=True to force
+    the interpret-mode kernel for validation (never a timing path); the
+    pointer-doubling jnp reference stays in ``kernels.ref`` as the
+    kernel-semantics oracle.
+    """
+    if interpret is None and jax.default_backend() != "tpu":
+        return _jitted_flood_hex_winner(boards, size)
+    return _hw.hex_winner(boards, size,
+                          interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("size",))
+def _jitted_flood_hex_winner(boards, size: int):
+    from repro.core import hex as hx
+    return hx.winner_flood_batch(boards, hx.HexSpec(size))
 
 
 def rmsnorm(x, w, eps: float = 1e-5, interpret: bool | None = None):

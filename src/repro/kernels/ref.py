@@ -48,6 +48,19 @@ def uct_select(wins: jnp.ndarray, visits: jnp.ndarray, vloss: jnp.ndarray,
     return select_child(scores, noise).astype(jnp.int32)
 
 
+def hex_winner(boards: jnp.ndarray, size: int) -> jnp.ndarray:
+    """(W, size*size) FILLED boards -> (W,) int8 winners in {1, 2}.
+
+    Same filled-board contract as the kernel (`repro.core.hex.winner`).
+    The batched pointer-doubling solve in `repro.core.hex` IS the jnp
+    reference semantics: one connectivity check for BLACK decides every
+    lane (the Hex theorem).
+    """
+    from repro.core import hex as hx
+    black = hx.connected_batch(boards, hx.BLACK, hx.HexSpec(size))
+    return jnp.where(black, jnp.int8(1), jnp.int8(2))
+
+
 def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
     """x: (..., D); w: (D,). fp32 statistics, input-dtype output."""
     xf = x.astype(jnp.float32)
