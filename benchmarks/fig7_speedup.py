@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import jax
 
-from repro.core import hex as hx
+from repro.core import game as game_mod
 from repro.core.gscpm import GSCPMConfig, gscpm_search
 from repro.core.mcts import uct_search
 
@@ -27,22 +27,24 @@ from repro.core.mcts import uct_search
 def run(n_playouts: int = 2048, n_workers: int = 16, board_size: int = 9,
         task_sweep=(4, 8, 16, 32, 64, 128, 256, 512),
         schedulers=("fifo", "rebalance", "one_per_core"),
-        seed: int = 0, repeats: int = 3) -> dict:
+        seed: int = 0, repeats: int = 3, game: str = "hex") -> dict:
     """Each point reports the best of ``repeats`` timed searches (min-time,
     the same convention as ``benchmarks.common.timed``): the harness hosts
     are shared and noisy, and a single timed search per point made the
-    recorded curves swing ~2x run-to-run."""
-    spec = hx.HexSpec(board_size)
-    board = hx.empty_board(spec)
+    recorded curves swing ~2x run-to-run. ``game`` picks any registered
+    Game (the sweep itself is game-agnostic — DESIGN.md §13)."""
+    g = game_mod.make_game(game, board_size)
+    board = g.init_board()
     key = jax.random.key(seed)
     tree_cap = max(1 << 14, 4 * n_playouts)
 
     # sequential baseline (warm-up excluded, as in the paper)
-    uct_search(board, 1, 64, key, board_size=board_size, tree_cap=tree_cap)
+    uct_search(board, 1, 64, key, board_size=board_size, tree_cap=tree_cap,
+               game=game)
     seq_rate = 0.0
     for _ in range(repeats):
         _, seq = uct_search(board, 1, n_playouts, key, board_size=board_size,
-                            tree_cap=tree_cap)
+                            tree_cap=tree_cap, game=game)
         seq_rate = max(seq_rate, seq["playouts_per_s"])
 
     curves: dict[str, dict] = {}
@@ -51,7 +53,7 @@ def run(n_playouts: int = 2048, n_workers: int = 16, board_size: int = 9,
         sweep = [n_workers] if sched == "one_per_core" else task_sweep
         for n_tasks in sweep:
             cfg = GSCPMConfig(
-                board_size=board_size, n_playouts=n_playouts,
+                game=game, board_size=board_size, n_playouts=n_playouts,
                 n_tasks=n_tasks, n_workers=n_workers, tree_cap=tree_cap,
                 scheduler=sched)
             gscpm_search(board, 1, cfg, key)          # warm-up/compile
@@ -69,6 +71,7 @@ def run(n_playouts: int = 2048, n_workers: int = 16, board_size: int = 9,
             }
         curves[sched] = pts
     return {
+        "game": game,
         "n_playouts": n_playouts,
         "n_workers": n_workers,
         "board": f"{board_size}x{board_size}",
@@ -79,9 +82,16 @@ def run(n_playouts: int = 2048, n_workers: int = 16, board_size: int = 9,
 
 
 if __name__ == "__main__":
+    import argparse
     import json
 
     from benchmarks.common import save_result
-    r = run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--game", default="hex",
+                    choices=list(game_mod.available_games()))
+    ap.add_argument("--playouts", type=int, default=2048)
+    args = ap.parse_args()
+    r = run(n_playouts=args.playouts, game=args.game)
     print(json.dumps(r, indent=1))
-    save_result("fig7_speedup", r)
+    save_result("fig7_speedup" if args.game == "hex"
+                else f"fig7_{args.game}", r)

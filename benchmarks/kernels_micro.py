@@ -105,8 +105,10 @@ def run(seed: int = 0) -> dict:
         pj_j = jax.jit(lambda b: ref.hex_winner(b, size))
         flood_v = jax.jit(jax.vmap(lambda b: hx.winner(b, spec)))
         po_b = jax.jit(lambda b, k: hx.playout_batch(b, 1, k, spec))
-        po_v = jax.jit(jax.vmap(
-            lambda b, k: hx.playout(b, jnp.int32(1), k, spec)))
+        # explicit per-lane formulation (`hx.playout` itself is now a
+        # width-1 wrapper over the batched path): fill + scalar flood winner
+        po_v = jax.jit(jax.vmap(lambda b, k: hx.winner(
+            hx.random_fill(b, jnp.int32(1), k, spec), spec)))
         for f, args in ((disp, (filled,)), (pj_j, (filled,)),
                         (flood_v, (filled,)), (po_b, (empty, ks)),
                         (po_v, (empty, ks))):
@@ -133,6 +135,38 @@ def run(seed: int = 0) -> dict:
         })
         hw[f"{size}x{size}W{W}"] = entry
     out["hex_winner"] = hw
+
+    # gomoku eval — the second Game workload's fused playout stage
+    # (completion-time resolution over a random fill) vs the sequential
+    # per-lane move-loop oracle. One jitted jnp path on every backend
+    # (no Pallas body yet — ROADMAP), so `dispatch` is backend-invariant.
+    from repro.core import game as game_mod
+
+    gk = {}
+    for (size, W) in [(9, 16), (11, 64)]:
+        g = game_mod.make_game("gomoku", size)
+        ks = jax.random.split(jax.random.fold_in(key, 9000 + size * W), W)
+        empty = jnp.tile(g.init_board()[None], (W, 1))
+        po_b = jax.jit(lambda b, k, g=g: g.playout_batch(b, 1, k))
+        po_v = jax.jit(jax.vmap(
+            lambda b, k, g=g: g.playout_scalar(b, jnp.int32(1), k)))
+        vals_b = jax.block_until_ready(po_b(empty, ks))
+        vals_v = jax.block_until_ready(po_v(empty, ks))
+        t_b, _ = timed(lambda: jax.block_until_ready(po_b(empty, ks)),
+                       repeats=5)
+        t_v, _ = timed(lambda: jax.block_until_ready(po_v(empty, ks)),
+                       repeats=5)
+        gk[f"{size}x{size}W{W}"] = {
+            "dispatch": "jnp_completion_scan",
+            "batched_vs_scalar_agreement": float(
+                (np.asarray(vals_b) == np.asarray(vals_v)).mean()),
+            "draw_fraction": float((np.asarray(vals_b) == 0).mean()),
+            "playout_batched_s": t_b,
+            "playout_scalar_vmap_s": t_v,
+            "playout_eval_per_s": W / t_b,
+            "playout_batched_speedup_vs_scalar": t_v / t_b,
+        }
+    out["gomoku_eval"] = gk
 
     # rmsnorm
     rn = {}

@@ -27,7 +27,6 @@ if __package__ in (None, ""):   # `python benchmarks/root_parallel.py`
     sys.path.insert(0, os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))
 
-from repro.core import hex as hx
 from repro.core.gscpm import GSCPMConfig, gscpm_search
 from repro.core.root_parallel import gscpm_search_batch
 
@@ -39,7 +38,7 @@ def run(n_playouts: int = 4096, n_workers: int = 1, board_size: int = 5,
     cfg = GSCPMConfig(board_size=board_size, n_playouts=n_playouts,
                       n_tasks=n_tasks, n_workers=n_workers,
                       tree_cap=tree_cap or max(512, n_playouts // 8))
-    board = hx.empty_board(cfg.spec)
+    board = cfg.game_obj.init_board()
     key = jax.random.key(seed)
 
     def one_single():

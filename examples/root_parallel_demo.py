@@ -11,7 +11,6 @@ synchronization so members share discoveries mid-search.
 
 import jax
 
-from repro.core import hex as hx
 from repro.core.gscpm import GSCPMConfig, gscpm_search
 from repro.core.root_parallel import gscpm_search_batch
 
@@ -22,7 +21,7 @@ def main():
     board_size, n_playouts, n_workers, n_trees = 7, 1024, 2, 8
     cfg = GSCPMConfig(board_size=board_size, n_playouts=n_playouts,
                       n_tasks=16, n_workers=n_workers, tree_cap=2048)
-    board = hx.empty_board(cfg.spec)
+    board = cfg.game_obj.init_board()
     key = jax.random.key(0)
 
     print(f"Hex {board_size}x{board_size}, {n_playouts} playouts/tree, "

@@ -13,12 +13,18 @@ shared tree. Here (DESIGN.md §2):
   TPU twin of the paper's 512-bit VPU-vectorized UCT loop (DESIGN.md §11) —
   then dedup-expands the proposed (leaf, move) pairs with prefix-sum slot
   allocation (the paper's atomic child index), evaluates W playouts as ONE
-  fused (W, cells) stage — one batched place, one sort-free parity fill,
-  one connectivity solve (``hex.playout_batch`` →
-  ``kernels.ops.hex_winner``, DESIGN.md §12) — and scatter-adds the
-  results along the W paths (the paper's atomic w_j/n_j);
+  fused (W, cells) stage through the game's batched playout primitive
+  (``game.playout_batch`` — for Hex one batched place, one sort-free
+  parity fill, one connectivity solve via ``kernels.ops.hex_winner``,
+  DESIGN.md §12) — and scatter-adds the results along the W paths (the
+  paper's atomic w_j/n_j);
 - per-task RNG streams come from ``fold_in`` (the paper's per-task MKL
   streams).
+
+This module is game-agnostic (DESIGN.md §13): every game-specific
+computation routes through the batched ``Game`` protocol
+(``repro.core.game`` — ``GSCPMConfig.game`` names a registry entry), so the
+same compiled machinery searches Hex, Gomoku, or any future registration.
 
 Grain size trades scheduling overhead against parallel width exactly as in
 the paper's Table I; the scheduling disciplines live in
@@ -36,8 +42,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hex as hx
+from repro.core import game as game_mod
 from repro.core import scheduler as sched
+from repro.core.game import EMPTY
 from repro.core import uct as uct_mod
 from repro.core.tree import (
     NO_NODE,
@@ -67,6 +74,7 @@ class GSCPMConfig:
     first value seen into the cached program.
     """
 
+    game: str = "hex"               # Game-registry name (core/game.py)
     board_size: int = 11
     # paper: 1,048,576 playouts (scaled for CPU harness)
     n_playouts: int = dataclasses.field(default=4096, compare=False)
@@ -84,8 +92,9 @@ class GSCPMConfig:
     playout: str = "batched"        # batched (fused (W, cells)) | scalar (oracle)
 
     @property
-    def spec(self) -> hx.HexSpec:
-        return hx.HexSpec(self.board_size)
+    def game_obj(self):
+        """The resolved Game instance (hashable; safe to close over in jit)."""
+        return game_mod.make_game(self.game, self.board_size)
 
     @property
     def grain(self) -> int:
@@ -93,20 +102,23 @@ class GSCPMConfig:
 
 
 # ------------------------------------------------------------- selection ----
-def select_one(tree: Tree, root_board: jnp.ndarray, spec: hx.HexSpec, cp: float,
+def select_one(tree: Tree, root_board: jnp.ndarray, game, cp: float,
                noise_key: jax.Array, noise_scale: float):
     """Descend from the root to a not-fully-expanded (or terminal) node.
 
     Returns (path, depth, leaf, board_at_leaf, n_empty_at_leaf). ``path`` is
-    (max_depth,) int32 padded with the tree's PAD row index.
+    (max_depth,) int32 padded with the tree's PAD row index. A node counts
+    as fully expanded only when its children cover every EMPTY cell; games
+    that end mid-board (e.g. a Gomoku five) never get there — their
+    terminal nodes keep zero children because ``game.legal_mask`` is empty,
+    so the descent stops at them without a per-level terminal test.
     """
-    n_cells = spec.n_cells
-    max_depth = n_cells + 1
+    max_depth = game.max_moves + 1
     cap = tree.cap
     C = tree.max_children
 
     path0 = jnp.full((max_depth,), cap, dtype=jnp.int32).at[0].set(0)
-    n_empty0 = (root_board == hx.EMPTY).sum().astype(jnp.int32)
+    n_empty0 = (root_board == EMPTY).sum().astype(jnp.int32)
 
     def cond(st):
         node, board, depth, path, n_empty, done = st
@@ -131,7 +143,7 @@ def select_one(tree: Tree, root_board: jnp.ndarray, spec: hx.HexSpec, cp: float,
         pick = uct_mod.select_child(scores, noise)
         child = safe[pick]
         mv = tree.move[child]
-        new_board = hx.place(board, mv, tree.to_move[node])
+        new_board = game.place(board, mv, tree.to_move[node])
         nxt = (child, new_board, depth + 1,
                path.at[depth + 1].set(child), n_empty - 1, False)
         stay = (node, board, depth, path, n_empty, True)
@@ -165,7 +177,7 @@ def advance_paths(paths: jnp.ndarray, depths: jnp.ndarray, child: jnp.ndarray,
         child[:, None], paths)
 
 
-def select_batch(tree: Tree, root_board: jnp.ndarray, spec: hx.HexSpec, cp,
+def select_batch(tree: Tree, root_board: jnp.ndarray, game, cp,
                  noise_keys: jax.Array, noise_scale: float):
     """Level-synchronous batched descent: all W lanes in lockstep.
 
@@ -180,8 +192,7 @@ def select_batch(tree: Tree, root_board: jnp.ndarray, spec: hx.HexSpec, cp,
 
     Returns (paths, depths, leaves, boards, n_empty), each batched over W.
     """
-    n_cells = spec.n_cells
-    max_depth = n_cells + 1
+    max_depth = game.max_moves + 1
     cap = tree.cap
     C = tree.max_children
     W = noise_keys.shape[0]
@@ -191,7 +202,7 @@ def select_batch(tree: Tree, root_board: jnp.ndarray, spec: hx.HexSpec, cp,
     depths0 = jnp.zeros((W,), jnp.int32)
     paths0 = jnp.full((W, max_depth), cap, dtype=jnp.int32).at[:, 0].set(0)
     n_empty0 = jnp.broadcast_to(
-        (root_board == hx.EMPTY).sum().astype(jnp.int32), (W,))
+        (root_board == EMPTY).sum().astype(jnp.int32), (W,))
     done0 = jnp.zeros((W,), bool)
 
     def cond(st):
@@ -209,7 +220,7 @@ def select_batch(tree: Tree, root_board: jnp.ndarray, spec: hx.HexSpec, cp,
                                noise=noise, lane_mask=~done)
         child = safe[jnp.arange(W), picks]
         mv = tree.move[child]
-        new_boards = jax.vmap(hx.place)(boards, mv, tree.to_move[nodes])
+        new_boards = jax.vmap(game.place)(boards, mv, tree.to_move[nodes])
         step = fully & (depths < max_depth - 2) & ~done
         nodes = jnp.where(step, child, nodes)
         boards = jnp.where(step[:, None], new_boards, boards)
@@ -224,15 +235,17 @@ def select_batch(tree: Tree, root_board: jnp.ndarray, spec: hx.HexSpec, cp,
 
 
 def propose_move(tree: Tree, leaf: jnp.ndarray, board: jnp.ndarray,
-                 spec: hx.HexSpec, key: jax.Array) -> jnp.ndarray:
+                 game, key: jax.Array) -> jnp.ndarray:
     """Sample a uniformly-random untried move at `leaf` (-1 if none).
 
-    "Random unexplored child" of the paper's expansion step.
+    "Random unexplored child" of the paper's expansion step. -1 (no
+    expansion) also covers TERMINAL leaves: ``game.legal_mask`` is all-False
+    there, so won/drawn positions are evaluated in place, never grown.
     """
-    n_cells = spec.n_cells
+    n_cells = game.n_cells
     C = tree.max_children
     cap = tree.cap
-    legal = board == hx.EMPTY
+    legal = game.legal_mask(board)
     slots = tree.children[leaf]
     valid = jnp.arange(C, dtype=jnp.int32) < tree.n_children[leaf]
     tried_moves = jnp.where(valid, tree.move[jnp.where(valid, slots, cap)], n_cells)
@@ -320,11 +333,11 @@ def sync_iteration(tree: Tree, root_board: jnp.ndarray, cfg: GSCPMConfig,
     see GSCPMConfig). Selection runs the level-synchronous batched descent
     by default; ``cfg.descent == "scalar"`` keeps the per-lane while-loop
     oracle (same RNG schedule, bit-identical trees). Likewise the playout
-    phase defaults to the fused (W, cells) evaluation and
-    ``cfg.playout == "scalar"`` keeps the per-lane flood-fill oracle
-    (bit-identical winners under the same RNG schedule).
+    phase defaults to the fused (W, cells) ``game.playout_batch`` and
+    ``cfg.playout == "scalar"`` keeps the per-lane ``game.playout_scalar``
+    oracle (bit-identical values under the same RNG schedule).
     """
-    spec = cfg.spec
+    game = cfg.game_obj
     W = cfg.n_workers
     R = max(1, min(cfg.vl_rounds, W))
     while W % R != 0:  # static fixup; R is a python int
@@ -339,15 +352,15 @@ def sync_iteration(tree: Tree, root_board: jnp.ndarray, cfg: GSCPMConfig,
         if cfg.descent == "scalar":
             def one(kn, km):
                 path, depth, leaf, board, n_empty = select_one(
-                    tree_r, root_board, spec, cp, kn, cfg.select_noise)
-                mv = propose_move(tree_r, leaf, board, spec, km)
+                    tree_r, root_board, game, cp, kn, cfg.select_noise)
+                mv = propose_move(tree_r, leaf, board, game, km)
                 return path, depth, leaf, board, mv
             out = jax.vmap(one)(k_noise, k_move)
         else:
             paths, depths, leaves, boards, _ = select_batch(
-                tree_r, root_board, spec, cp, k_noise, cfg.select_noise)
+                tree_r, root_board, game, cp, k_noise, cfg.select_noise)
             mvs = jax.vmap(
-                lambda l, b, k: propose_move(tree_r, l, b, spec, k)
+                lambda l, b, k: propose_move(tree_r, l, b, game, k)
             )(leaves, boards, k_move)
             out = (paths, depths, leaves, boards, mvs)
         return (*out, k_po)
@@ -387,28 +400,22 @@ def sync_iteration(tree: Tree, root_board: jnp.ndarray, cfg: GSCPMConfig,
         jnp.where(expanded[:, None], new_ids[:, None], tree.cap),
         paths)
 
+    # place each lane's proposed move (if any) — game-agnostic given the
+    # shared board convention; lanes that proposed nothing evaluate the
+    # leaf position itself (terminal leaves included)
+    movers = tree.to_move[leaves]
+    do = moves >= 0
+    placed = jax.vmap(game.place)(boards, jnp.maximum(moves, 0), movers)
+    b2 = jnp.where(do[:, None], placed, boards)
+    nxt = jnp.where(do, 3 - movers, movers)
     if cfg.playout == "scalar":
-        # per-lane oracle: W interleaved flood-fill playouts under vmap
-        def one_playout(board, leaf, mv, k):
-            mover = tree.to_move[leaf]
-            b2 = jnp.where(mv >= 0, hx.place(board, jnp.maximum(mv, 0), mover),
-                           board)
-            nxt = jnp.where(mv >= 0, 3 - mover, mover)
-            filled = hx.random_fill(b2, nxt, k, spec)
-            return hx.winner(filled, spec)
-
-        winners = jax.vmap(one_playout)(boards, leaves, moves, po_keys)
+        # per-lane oracle: W interleaved scalar playouts under vmap
+        winners = jax.vmap(game.playout_scalar)(b2, nxt, po_keys)
     else:
-        # fused leaf evaluation: one batched place, one parity fill, one
-        # connectivity solve for all W lanes (bit-identical winners to the
-        # oracle above — tests/test_hex_batch.py)
-        movers = tree.to_move[leaves]
-        do = moves >= 0
-        placed = boards.at[jnp.arange(W), jnp.maximum(moves, 0)].set(
-            movers.astype(jnp.int8))
-        b2 = jnp.where(do[:, None], placed, boards)
-        nxt = jnp.where(do, 3 - movers, movers)
-        winners = hx.playout_batch(b2, nxt, po_keys, spec)
+        # fused leaf evaluation: ONE batched (W, cells) playout stage for
+        # all W lanes (bit-identical values to the oracle above —
+        # tests/test_game_protocol.py)
+        winners = game.playout_batch(b2, nxt, po_keys)
     return backup_paths(tree, paths, winners, active.astype(jnp.float32))
 
 
@@ -437,8 +444,7 @@ def fold_task_keys(key: jax.Array, task_ids: jnp.ndarray) -> jax.Array:
 def gscpm_search(board: jnp.ndarray, to_move: int, cfg: GSCPMConfig,
                  key: jax.Array) -> tuple[Tree, dict[str, Any]]:
     """Full GSCPM search (paper Fig 4): schedule tasks, return tree + stats."""
-    spec = cfg.spec
-    tree = init_tree(cfg.tree_cap, spec.n_cells, to_move)
+    tree = init_tree(cfg.tree_cap, cfg.game_obj.n_actions, to_move)
     schedule = sched.make_schedule(
         cfg.n_playouts, cfg.n_tasks, cfg.n_workers, cfg.scheduler)
 

@@ -46,6 +46,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import game as game_mod
+
 EMPTY = jnp.int8(0)
 BLACK = jnp.int8(1)  # connects top <-> bottom
 WHITE = jnp.int8(2)  # connects left <-> right
@@ -364,19 +366,13 @@ def random_fill_batch(boards: jnp.ndarray, to_move, keys: jax.Array,
     is counted directly: rank[i] = #{empty j : (noise_j, j) < (noise_i, i)}
     — one (W, n, n) boolean compare-and-count, with the same
     index-tie-break a stable argsort would apply. Bit-identical to the
-    argsort formulation (ties included) and sort-free.
+    argsort formulation (ties included) and sort-free. The rank/color core
+    is shared with every other registered game
+    (``game.empty_fill_ranks`` / ``game.parity_fill_colors``).
     """
-    W, n = boards.shape
     empties = boards == EMPTY
-    noise = jax.vmap(lambda k: jax.random.uniform(k, (n,)))(keys)
-    idx = jnp.arange(n, dtype=jnp.int32)
-    nj, ni = noise[:, None, :], noise[:, :, None]
-    earlier = (nj < ni) | ((nj == ni)
-                           & (idx[None, None, :] < idx[None, :, None]))
-    rank = jnp.sum(earlier & empties[:, None, :], axis=2)
-    tm = jnp.broadcast_to(jnp.asarray(to_move, jnp.int32), (W,))[:, None]
-    other = jnp.int32(3) - tm
-    fill_color = jnp.where((rank % 2) == 0, tm, other).astype(jnp.int8)
+    rank = game_mod.empty_fill_ranks(boards, keys)
+    fill_color = game_mod.parity_fill_colors(rank, to_move)
     return jnp.where(empties, fill_color, boards)
 
 
@@ -409,9 +405,14 @@ def random_fill(
 def playout(
     board: jnp.ndarray, to_move: jnp.ndarray, key: jax.Array, spec: HexSpec
 ) -> jnp.ndarray:
-    """Run one random playout; return the winning player (int8 1|2)."""
-    filled = random_fill(board, to_move, key, spec)
-    return winner(filled, spec)
+    """Run one random playout; return the winning player (int8 1|2).
+
+    The width-1 case of ``playout_batch`` (same fill stream, same winner
+    dispatch). The genuinely-scalar formulation — per-lane flood-fill
+    winner — survives as ``HexGame.playout_scalar``, the oracle the
+    bit-identity tests and the ``playout="scalar"`` search config use.
+    """
+    return playout_batch(board[None], to_move, key[None], spec)[0]
 
 
 def playout_value(
@@ -421,7 +422,8 @@ def playout_value(
     key: jax.Array,
     spec: HexSpec,
 ) -> jnp.ndarray:
-    """Playout result as 1.0 if `perspective` wins else 0.0."""
+    """Playout result as 1.0 if `perspective` wins else 0.0 (width-1 over
+    the batched path; Hex never draws, so the value is always 0 or 1)."""
     w = playout(board, to_move, key, spec)
     return (w == perspective.astype(jnp.int8)).astype(jnp.float32)
 
@@ -429,18 +431,65 @@ def playout_value(
 def replay_moves(
     moves: jnp.ndarray, n_moves: jnp.ndarray, first_player: jnp.ndarray, spec: HexSpec
 ) -> jnp.ndarray:
-    """Reconstruct a board from a move list (fixed-length, masked by n_moves).
+    """Reconstruct a board from a move list — the shared masked-scatter
+    (``game.replay_moves``) at Hex's board length; see its contract."""
+    return game_mod.replay_moves(moves, n_moves, first_player, spec.n_cells)
 
-    One masked scatter instead of a per-move `fori_loop`: move i places the
-    (i-even ? first : other) player's stone; moves at or past ``n_moves``
-    land on a pad cell and are dropped. Moves must target distinct cells
-    (every legal game's move list does — a move is an empty cell).
+
+# ------------------------------------------------------- the Game protocol ----
+class HexGame(NamedTuple):
+    """Hex through the batched ``Game`` protocol (``core/game.py``).
+
+    Every method delegates to the module functions above, so a search routed
+    through the seam runs the exact computation (and RNG schedule) the
+    pre-seam Hex-coupled search ran — bit-identical trees, pinned by
+    tests/test_game_protocol.py. Hex never draws (Hex theorem), a game ends
+    only when the board fills, and ``winner_batch`` keeps the per-backend
+    pointer-doubling/flood dispatch of ``kernels.ops.hex_winner``
+    (DESIGN.md §12).
     """
-    L = moves.shape[0]
-    idx = jnp.arange(L, dtype=jnp.int32)
-    first_player = jnp.asarray(first_player, jnp.int32)
-    players = jnp.where((idx % 2) == 0, first_player,
-                        3 - first_player).astype(jnp.int8)
-    tgt = jnp.where(idx < n_moves, moves, spec.n_cells)
-    board = jnp.zeros((spec.n_cells + 1,), dtype=jnp.int8).at[tgt].set(players)
-    return board[: spec.n_cells]
+
+    size: int
+
+    @property
+    def n_cells(self) -> int:
+        return self.size * self.size
+
+    @property
+    def n_actions(self) -> int:
+        return self.n_cells  # a move is an empty cell
+
+    @property
+    def max_moves(self) -> int:
+        return self.n_cells  # games end exactly when the board fills
+
+    def init_board(self) -> jnp.ndarray:
+        return empty_board(self)
+
+    def place(self, board, move, player) -> jnp.ndarray:
+        return place(board, move, player)
+
+    def legal_mask(self, board) -> jnp.ndarray:
+        return legal_mask(board)
+
+    def terminal_batch(self, boards) -> jnp.ndarray:
+        return ~(boards == EMPTY).any(axis=-1)
+
+    def winner_batch(self, boards) -> jnp.ndarray:
+        return winner_batch(boards, self)
+
+    def playout_batch(self, boards, to_move, keys) -> jnp.ndarray:
+        return playout_batch(boards, to_move, keys, self)
+
+    def playout_scalar(self, board, to_move, key) -> jnp.ndarray:
+        # the per-lane oracle: batched fill stream at width 1, but the
+        # WINNER via the scalar O(diameter) flood fill — an independent
+        # connectivity formulation to hold the fused path against
+        filled = random_fill(board, to_move, key, self)
+        return winner(filled, self)
+
+    def replay_moves(self, moves, n_moves, first_player) -> jnp.ndarray:
+        return replay_moves(moves, n_moves, first_player, self)
+
+
+game_mod.register_game("hex", HexGame)

@@ -62,9 +62,9 @@ def _forest_chunk(forest: Tree, boards: jnp.ndarray, cfg: GSCPMConfig,
     descent's ``ops.uct_select`` tile composes with this vmap (a leading E
     axis on the (W, C) tiles — one fused (E·W, C) selection per level), and
     so does the fused playout stage: the whole forest's leaf evaluations
-    become one (E·W, cells) fill + pointer-doubling connectivity solve with
-    a single convergence loop (``hex.playout_batch`` under vmap,
-    DESIGN.md §12) instead of E·W interleaved flood-fill while-loops."""
+    become one (E·W, cells) batched ``game.playout_batch`` under vmap
+    (DESIGN.md §12/§13 — for Hex a single fill + connectivity solve with
+    one convergence loop) instead of E·W interleaved scalar while-loops."""
 
     def one_tree(tree, board, keys, act):
         def body(i, tr):
@@ -226,8 +226,7 @@ def gscpm_search_batch(boards: jnp.ndarray, to_move, cfg: GSCPMConfig,
     E = boards.shape[0]
     if n_trees is not None and n_trees != E:
         raise ValueError(f"n_trees={n_trees} != boards.shape[0]={E}")
-    spec = cfg.spec
-    n_moves = spec.n_cells
+    n_moves = cfg.game_obj.n_actions  # the Game seam's move-id space
 
     forest = init_forest(E, cfg.tree_cap, n_moves, to_move)
     member_keys = fold_task_keys(key, jnp.arange(E, dtype=jnp.int32))
@@ -278,9 +277,15 @@ def gscpm_search_batch(boards: jnp.ndarray, to_move, cfg: GSCPMConfig,
     return forest, stats
 
 
-def check_forest_invariants(forest: Tree) -> None:
-    """Per-member structural invariants (host-side, used by tests)."""
+def check_forest_invariants(forest: Tree, *,
+                            discrete_credits: bool = True) -> None:
+    """Per-member structural invariants (host-side, used by tests).
+
+    ``discrete_credits=False`` for token-tree forests backed up with
+    continuous values (see ``tree.check_invariants``).
+    """
     from repro.core.tree import check_invariants
 
     for e in range(forest_size(forest)):
-        check_invariants(forest_member(forest, e))
+        check_invariants(forest_member(forest, e),
+                         discrete_credits=discrete_credits)

@@ -81,14 +81,17 @@ def backup_paths(tree: Tree, paths: jnp.ndarray, values: jnp.ndarray,
     """Batched backpropagation — the scatter-add analogue of atomic w_j/n_j.
 
     paths:   (W, max_depth) i32 node ids, PAD (== cap) where unused
-    values:  (W,) int32 winning player of each worker's playout (1|2)
+    values:  (W,) playout outcomes: winning player (1|2) or 0 for a DRAW
     weights: (W,) f32 1.0 for active lanes, 0.0 for masked lanes
     """
     W, D = paths.shape
     flat = paths.reshape(-1)
-    # credit: 1 if the player who moved into the node won the playout
+    # credit: 1 if the player who moved into the node won the playout,
+    # 0.5 on a draw (the value every player is indifferent to — keeps
+    # X_j = w_j / n_j in [0, 1] with 0.5 as the draw point)
     mover = 3 - tree.to_move[flat]  # (W*D,)
-    win = (mover == jnp.repeat(values.astype(jnp.int32), D)).astype(jnp.float32)
+    vals = jnp.repeat(values.astype(jnp.int32), D)
+    win = jnp.where(vals == 0, 0.5, (mover == vals).astype(jnp.float32))
     w = jnp.repeat(weights, D) * (flat != tree.cap)  # mask pads & inactive lanes
     visits = tree.visits.at[flat].add(w)
     wins = tree.wins.at[flat].add(w * win)
@@ -195,8 +198,15 @@ def root_move_stats(tree: Tree, n_moves: int) -> tuple[jnp.ndarray, jnp.ndarray]
 
 
 # ------------------------------------------------------------ invariants ----
-def check_invariants(tree: Tree) -> None:
-    """Host-side structural invariant checks (used by tests)."""
+def check_invariants(tree: Tree, *, discrete_credits: bool = True) -> None:
+    """Host-side structural invariant checks (used by the property tests).
+
+    ``discrete_credits=True`` (board-game trees) additionally asserts the
+    draw-aware credit structure: backups add 0, 0.5 (draw) or 1 win per
+    visit, so accumulated wins are half-integers. Token trees backed up
+    with continuous values (``serve.mcts_decode.backup_values``) must pass
+    ``discrete_credits=False``; the value-range check applies to both.
+    """
     import numpy as np
 
     t = jax.tree.map(np.asarray, tree)
@@ -220,6 +230,13 @@ def check_invariants(tree: Tree) -> None:
         # visits of children never exceed the parent's visits
         assert t.visits[kids].sum() <= t.visits[i] + 1e-6
         assert 0.0 <= t.wins[i] <= t.visits[i] + 1e-6
+        # draw-aware value range: playout credits are 0, 0.5 (draw) or 1,
+        # so accumulated wins are half-integers; 0 <= wins <= visits above
+        # already bounds the signed value 2*(w/n) - 1 to [-1, 1] with 0
+        # (all-draw) allowed
+        if discrete_credits:
+            assert abs(2.0 * t.wins[i] - round(2.0 * float(t.wins[i]))) < 1e-4, \
+                f"node {i}: wins {t.wins[i]} not a half-integer credit sum"
     # every allocated non-root node is some node's child exactly once
     all_kids = []
     for i in range(n):

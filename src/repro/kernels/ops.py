@@ -6,9 +6,12 @@ body) everywhere else — which is how this CPU container validates them.
 ``uct_select`` and ``hex_winner`` sit on the search hot path, so their auto
 mode never runs interpret-mode Pallas: compiled Pallas on TPU, the jitted
 jnp reference on every other backend (interpret mode remains available for
-validation via ``interpret=True``). Call sites (models/attention.py,
-core/gscpm.py, core/hex.py, serve/mcts_decode.py) go through these
-wrappers only.
+validation via ``interpret=True``). This module is also the per-game eval
+dispatch point of the Game seam (DESIGN.md §13): ``hex_winner`` for Hex,
+``gomoku_winner`` / ``gomoku_first_winner`` for Gomoku (single jnp body on
+all backends until a Pallas twin lands — ROADMAP). Call sites
+(models/attention.py, core/gscpm.py, core/hex.py, core/gomoku.py,
+serve/mcts_decode.py) go through these wrappers only.
 """
 
 from __future__ import annotations
@@ -95,6 +98,49 @@ def hex_winner(boards, size: int, interpret: bool | None = None):
 def _jitted_flood_hex_winner(boards, size: int):
     from repro.core import hex as hx
     return hx.winner_flood_batch(boards, hx.HexSpec(size))
+
+
+def gomoku_winner(boards, size: int, interpret: bool | None = None):
+    """Batched Gomoku terminal winner — the per-game eval dispatch twin of
+    ``hex_winner`` (DESIGN.md §13).
+
+    boards: (W, size*size) TERMINAL boards; returns (W,) int8 in
+    {0 draw, 1, 2}. Unlike Hex — whose connectivity solve has two
+    formulations with backend-dependent winners (pointer doubling vs flood
+    fill) — the five-in-a-row test is four static-roll window scans that
+    lower to plain vector shifts/ANDs on every backend, so a single jitted
+    jnp body serves TPU and CPU alike. A dedicated Pallas kernel slot stays
+    open in ROADMAP.md; ``interpret`` is accepted for signature symmetry.
+    """
+    del interpret  # no Pallas body yet — one jnp path on all backends
+    return _jitted_gomoku_winner(boards, size)
+
+
+@functools.partial(jax.jit, static_argnames=("size",))
+def _jitted_gomoku_winner(boards, size: int):
+    from repro.core import gomoku as gm
+    return gm.winner_scan_batch(boards, gm.GomokuSpec(size))
+
+
+def gomoku_first_winner(filled, times, size: int,
+                        interpret: bool | None = None):
+    """Fused Gomoku playout outcome: completion-time resolution over a
+    random fill (the playout phase's dispatch point for the ``gomoku``
+    game, as ``hex_winner`` is for ``hex``).
+
+    filled: (W, size*size) int8 fully-filled boards; times: (W, size*size)
+    int32 fill rank per cell (-1 for pre-playout stones). Returns (W,) int8
+    outcomes {0 draw, 1, 2}: the color of the monochrome 5-window whose
+    last cell has the minimal fill rank (see ``core/gomoku.py``).
+    """
+    del interpret
+    return _jitted_gomoku_first_winner(filled, times, size)
+
+
+@functools.partial(jax.jit, static_argnames=("size",))
+def _jitted_gomoku_first_winner(filled, times, size: int):
+    from repro.core import gomoku as gm
+    return gm.first_completion_winner(filled, times, gm.GomokuSpec(size))
 
 
 def rmsnorm(x, w, eps: float = 1e-5, interpret: bool | None = None):

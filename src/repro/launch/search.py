@@ -1,0 +1,71 @@
+"""Search launcher: GSCPM over any registered game (DESIGN.md §13).
+
+``python -m repro.launch.search --game gomoku --size 9 --playouts 2048``
+runs a Grain-Size Controlled Parallel MCTS from the empty position and
+prints the chosen move and throughput; ``--trees E`` switches to the
+root-parallel forest (E trees advanced by one jitted program per round,
+visit-sum + majority-vote merges). The ``--game`` flag resolves through the
+``Game`` registry (``repro.core.game``) — Hex and Gomoku ship; new games
+only need to register a protocol implementation.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.core import game as game_mod
+from repro.core.gscpm import GSCPMConfig, gscpm_search
+from repro.core.root_parallel import gscpm_search_batch
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--game", default="hex",
+                   choices=list(game_mod.available_games()),
+                   help="registered Game to search (core/game.py registry)")
+    p.add_argument("--size", type=int, default=9, help="board side length")
+    p.add_argument("--playouts", type=int, default=2048)
+    p.add_argument("--tasks", type=int, default=64,
+                   help="grain dial: m = playouts / tasks")
+    p.add_argument("--workers", type=int, default=16, help="parallel lanes")
+    p.add_argument("--trees", type=int, default=1,
+                   help=">1: root-parallel ensemble of this many trees")
+    p.add_argument("--scheduler", default="fifo",
+                   choices=["fifo", "rebalance", "one_per_core",
+                            "sequential"])
+    p.add_argument("--cp", type=float, default=1.0)
+    p.add_argument("--to-move", type=int, default=1, choices=[1, 2])
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args()
+
+    cfg = GSCPMConfig(game=args.game, board_size=args.size,
+                      n_playouts=args.playouts, n_tasks=args.tasks,
+                      n_workers=args.workers, cp=args.cp,
+                      scheduler=args.scheduler,
+                      tree_cap=max(1 << 14, 4 * args.playouts))
+    board = cfg.game_obj.init_board()
+    key = jax.random.key(args.seed)
+
+    if args.trees > 1:
+        _, st = gscpm_search_batch(board, args.to_move, cfg, key,
+                                   n_trees=args.trees)
+        print(f"[{args.game} {args.size}x{args.size}] {st['n_trees']} trees, "
+              f"{st['playouts']} playouts in {st['time_s']:.2f}s "
+              f"({st['playouts_per_s']:.0f}/s, grain m={st['grain']})")
+        print(f"  best move (visit-sum) {st['best_move_sum']}, "
+              f"(majority vote) {st['best_move_vote']}; "
+              f"member values {['%.3f' % v for v in st['member_root_values']]}")
+    else:
+        _, st = gscpm_search(board, args.to_move, cfg, key)
+        print(f"[{args.game} {args.size}x{args.size}] {st['playouts']} "
+              f"playouts in {st['time_s']:.2f}s "
+              f"({st['playouts_per_s']:.0f}/s, grain m={st['grain']}, "
+              f"{st['tree_nodes']} nodes)")
+        print(f"  best move {st['best_move']}, "
+              f"root value {st['root_value']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -34,7 +34,7 @@ def built_tree(size: int, key, n_playouts: int = 192):
     cfg = GSCPMConfig(board_size=size, n_playouts=n_playouts, n_tasks=8,
                       n_workers=4, tree_cap=4096)
     tree, _ = gscpm_search(board, 1, cfg, key)
-    return tree, board, hx.HexSpec(size)
+    return tree, board, hx.HexGame(size)
 
 
 # ------------------------------------------------------- descent oracle ----

@@ -153,8 +153,11 @@ def test_playout_batch_bit_identical(seed, size, W):
     keys = jax.random.split(jax.random.key(seed), W)
     to_move = 1 + (seed % 2)
     got = hx.playout_batch(boards, to_move, keys, spec)
-    want = jax.vmap(
-        lambda b, k: hx.playout(b, jnp.int32(to_move), k, spec))(boards, keys)
+    # explicit scalar formulation (fill + per-lane flood-fill winner):
+    # `hx.playout` itself is now a width-1 wrapper over the batched path,
+    # so the oracle is spelled out to stay an independent implementation
+    want = jax.vmap(lambda b, k: hx.winner(
+        hx.random_fill(b, jnp.int32(to_move), k, spec), spec))(boards, keys)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
@@ -167,8 +170,8 @@ def test_playout_batch_composes_with_forest_vmap():
     boards = jnp.tile(hx.empty_board(spec)[None, None], (E, W, 1))
     got = jax.jit(jax.vmap(
         lambda b, k: hx.playout_batch(b, 1, k, spec)))(boards, keys)
-    want = jax.vmap(jax.vmap(
-        lambda b, k: hx.playout(b, jnp.int32(1), k, spec)))(boards, keys)
+    want = jax.vmap(jax.vmap(lambda b, k: hx.winner(
+        hx.random_fill(b, jnp.int32(1), k, spec), spec)))(boards, keys)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
