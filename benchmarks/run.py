@@ -4,10 +4,11 @@ Runs one benchmark per paper table/figure (CPU-scaled budgets), the kernel
 microbenches, and the roofline-table render; writes JSON artifacts to
 artifacts/bench/ and prints a summary. Pass --full for the larger budgets.
 
-When the run includes fig7 (and optionally tpfifo), it also writes a
-root-level ``BENCH_mcts.json`` trajectory summary — search playouts/s and
-best serving speedup for this host/backend — so the perf trajectory
-accumulates across PRs (CI uploads it as an artifact per commit).
+When the run includes fig7 (and optionally tpfifo / serve_games), it also
+writes a root-level ``BENCH_mcts.json`` trajectory summary — search
+playouts/s, best serving speedup, and mixed-game move-latency percentiles
+for this host/backend — so the perf trajectory accumulates across PRs (CI
+uploads it as an artifact per commit).
 """
 
 from __future__ import annotations
@@ -29,7 +30,8 @@ def main():
 
     from benchmarks import (ablate_vloss, fig5_cilkview, fig7_speedup,
                             fig9_mapping, kernels_micro, roofline_table,
-                            root_parallel, table2_sequential, tpfifo)
+                            root_parallel, serve_games, table2_sequential,
+                            tpfifo)
     from benchmarks.common import save_result
 
     n_po = 8192 if args.full else 1024
@@ -53,6 +55,8 @@ def main():
         "roofline_table": lambda: roofline_table.run(),
         "root_parallel": lambda: root_parallel.run(n_playouts=n_po),
         "tpfifo": lambda: tpfifo.run(n_requests=48 if args.full else 24),
+        "serve_games": lambda: serve_games.run(
+            n_requests=32 if args.full else 16),
     }
     if args.only:
         keep = {k.strip() for k in args.only.split(",")}
@@ -135,6 +139,10 @@ def write_mcts_trajectory(results: dict) -> str | None:
         payload["games"] = games
     if "tpfifo" in results:
         payload["tpfifo_best_speedup"] = results["tpfifo"]["best_speedup"]
+    if "serve_games" in results:
+        # mixed hex+gomoku Poisson serving: move-latency percentiles,
+        # playouts/s, and the zero-recompile ledger (see serve_games.py)
+        payload["serving"] = results["serve_games"]["serving"]
     km = results.get("kernels_micro")
     if km and "hex_winner" in km:
         # fused playout-evaluation throughput per (board, W) case + the
@@ -181,6 +189,16 @@ def _summ(name: str, res: dict) -> dict:
                              for m, r in res["tpfifo"].items()},
                 "best": round(res["best_speedup"], 2),
                 "pass": res["acceptance"]["pass"]}
+    if name == "serve_games":
+        s = res["serving"]
+        return {"playouts_per_s": round(s["playouts_per_s"]),
+                "move_latency_ms": {"p50": round(
+                    s["move_latency_p50_s"] * 1e3),
+                    "p95": round(s["move_latency_p95_s"] * 1e3)},
+                "p50_vs_one_per_core": round(s["p50_vs_one_per_core"], 2),
+                "p95_vs_one_per_core": round(s["p95_vs_one_per_core"], 2),
+                "preemptions": s["preemptions"],
+                "recompiles": s["recompiles"]}
     if name == "roofline_table":
         return {"n_ok": res["n_ok"], "n_cells": res["n_cells"]}
     return {}

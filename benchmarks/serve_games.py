@@ -1,0 +1,157 @@
+"""Mixed-game Poisson serving through the TPFIFO quantum engine.
+
+The multi-tenant twin of the paper's irregular-workload story: hex and
+gomoku search requests with heterogeneous playout budgets arrive Poisson
+and are served in m-round GSC-PM quanta from per-game-class slot pools
+(`repro.serve.games`). Measured against the one_per_core run-to-completion
+baseline (the paper's one-task-per-lane discipline): preemptive grain
+sharing lets small requests slip between a big request's quanta instead of
+waiting out its whole search — median move latency drops (roughly the big
+search's service time) while the few big tenants pay at the p95 tail for
+the quanta they yielded. Both ratios are reported; the discipline is a
+latency-fairness dial, not a free lunch.
+
+Reported: p50/p95 move latency, aggregate playouts/s, preemption counts,
+and the compile ledger — serving an entire mixed trace must add ZERO
+`run_chunk` entries beyond the one-per-game-class warm-up (asserted).
+Feeds BENCH_mcts.json under the ``serving`` key.
+
+    PYTHONPATH=src python benchmarks/serve_games.py [--smoke|--full]
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+
+if __package__ in (None, ""):   # `python benchmarks/serve_games.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from repro.core.gscpm import run_chunk
+from repro.serve.games import GameRequest, TPFIFOGameEngine
+
+GAMES = ("hex", "gomoku")
+
+
+def make_trace(n_requests: int, rate_rps: float, board_size: int,
+               playout_choices, seed: int):
+    """Poisson arrivals, alternating game classes, mixed budgets/Cp/seeds."""
+    rng = np.random.default_rng(seed)
+    trace, t = [], 0.0
+    for rid in range(n_requests):
+        t += float(rng.exponential(1.0 / rate_rps))
+        npo = int(rng.choice(playout_choices))
+        trace.append((t, dict(
+            rid=rid, game=GAMES[rid % len(GAMES)], board_size=board_size,
+            n_playouts=npo, n_tasks=max(1, npo // 8),
+            cp=float(rng.uniform(0.8, 1.4)), seed=rid)))
+    return trace
+
+
+def _requests(trace):
+    return [(t, GameRequest(**kw)) for t, kw in trace]
+
+
+def serve_trace(engine, trace) -> dict:
+    done = engine.run_trace(_requests(trace))
+    st = engine.stats()
+    assert st.n_finished == len(trace), \
+        f"only {st.n_finished}/{len(trace)} requests finished"
+    out = st.as_dict()
+    playouts = sum(r.result["playouts"] for r in done)
+    out["playouts"] = playouts
+    out["playouts_per_s"] = playouts / max(out["wall_s"], 1e-9)
+    out["ticks"] = engine._ticks
+    return out
+
+
+def run(n_requests: int = 16, slots: int = 2, grain: int = 2,
+        n_workers: int = 8, board_size: int = 7, rate_rps: float = 64.0,
+        preempt_quanta: int | None = 2, tree_cap: int = 1 << 11,
+        playout_choices=(128, 128, 256, 256, 512, 2048), seed: int = 0,
+        smoke: bool = False) -> dict:
+    if smoke:
+        n_requests, board_size, tree_cap = 6, 5, 512
+        playout_choices, rate_rps = (32, 64, 128), 50.0
+
+    trace = make_trace(n_requests, rate_rps, board_size, playout_choices,
+                       seed)
+
+    def engine(policy="fifo", preempt=preempt_quanta):
+        return TPFIFOGameEngine(n_slots=slots, grain=grain, policy=policy,
+                                preempt_quanta=preempt, n_workers=n_workers,
+                                tree_cap=tree_cap)
+
+    # compile off the clock: one tiny request per game class warms the one
+    # quantum program each class ever gets
+    warm = [(0.0, dict(rid=f"warm-{g}", game=g, board_size=board_size,
+                       n_playouts=8, n_tasks=2, seed=0)) for g in GAMES]
+    serve_trace(engine(), warm)
+    cache_before = run_chunk._cache_size()
+
+    tpfifo = serve_trace(engine(), trace)
+    one_per_core = serve_trace(engine(policy="one_per_core", preempt=None),
+                               trace)
+    recompiles = run_chunk._cache_size() - cache_before
+    assert recompiles == 0, \
+        f"mixed-budget serving grew the jit cache by {recompiles}"
+
+    p50_ratio = one_per_core["latency_p50"] / max(tpfifo["latency_p50"],
+                                                  1e-9)
+    p95_ratio = one_per_core["latency_p95"] / max(tpfifo["latency_p95"],
+                                                  1e-9)
+    return {
+        "config": {"n_requests": n_requests, "slots": slots, "grain": grain,
+                   "n_workers": n_workers, "board_size": board_size,
+                   "rate_rps": rate_rps, "preempt_quanta": preempt_quanta,
+                   "tree_cap": tree_cap,
+                   "playout_choices": list(playout_choices), "seed": seed,
+                   "smoke": smoke},
+        "tpfifo": tpfifo,
+        "one_per_core": one_per_core,
+        "serving": {
+            "games": list(GAMES),
+            "board": f"{board_size}x{board_size}",
+            "n_requests": n_requests,
+            "playouts_per_s": tpfifo["playouts_per_s"],
+            "move_latency_p50_s": tpfifo["latency_p50"],
+            "move_latency_p95_s": tpfifo["latency_p95"],
+            "p50_vs_one_per_core": p50_ratio,
+            "p95_vs_one_per_core": p95_ratio,
+            "preemptions": tpfifo["n_preemptions"],
+            "recompiles": recompiles,
+        },
+    }
+
+
+def main():
+    import argparse
+
+    from benchmarks.common import save_result
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny trace (CI rot-guard, <1 min)")
+    p.add_argument("--full", action="store_true")
+    args = p.parse_args()
+
+    out = run(smoke=args.smoke, n_requests=32 if args.full else 16)
+    for name in ("tpfifo", "one_per_core"):
+        r = out[name]
+        print(f"{name:>12}: {r['playouts_per_s']:10.0f} playouts/s   "
+              f"p50/p95 move latency {r['latency_p50']*1e3:6.0f}/"
+              f"{r['latency_p95']*1e3:6.0f} ms   "
+              f"preempts {r['n_preemptions']}")
+    s = out["serving"]
+    print(f"one_per_core / tpfifo latency: p50 {s['p50_vs_one_per_core']:.2f}x"
+          f"  p95 {s['p95_vs_one_per_core']:.2f}x   "
+          f"recompiles during serving: {s['recompiles']}")
+    path = save_result("serve_games", out)
+    print("->", path)
+
+
+if __name__ == "__main__":
+    main()

@@ -441,6 +441,23 @@ def fold_task_keys(key: jax.Array, task_ids: jnp.ndarray) -> jax.Array:
     return jax.vmap(lambda t: jax.random.fold_in(key, t))(task_ids)
 
 
+def run_schedule_round(tree: Tree, board: jnp.ndarray, cfg: GSCPMConfig,
+                       key: jax.Array, rnd: sched.Round, cp) -> Tree:
+    """Advance one schedule ``Round``: the atomic dispatch unit of a search.
+
+    Both the uninterrupted driver (``gscpm_search``) and the TPFIFO
+    game-serving engine (``repro.serve.games``) run searches as a sequence
+    of these calls — a round's RNG streams depend only on (``key``,
+    ``rnd.task_ids``), never on wall-clock interleaving, so a search served
+    in grain-sized quanta with preemptions in between is BIT-IDENTICAL to
+    the same round sequence run back to back (pinned in
+    tests/test_serve_games.py).
+    """
+    task_keys = fold_task_keys(key, jnp.asarray(rnd.task_ids, dtype=jnp.int32))
+    return run_chunk(tree, board, cfg, task_keys, jnp.asarray(rnd.active),
+                     jnp.asarray(rnd.m, dtype=jnp.int32), cp)
+
+
 def gscpm_search(board: jnp.ndarray, to_move: int, cfg: GSCPMConfig,
                  key: jax.Array) -> tuple[Tree, dict[str, Any]]:
     """Full GSCPM search (paper Fig 4): schedule tasks, return tree + stats."""
@@ -453,10 +470,7 @@ def gscpm_search(board: jnp.ndarray, to_move: int, cfg: GSCPMConfig,
     playouts = 0
     masked_lane_iters = 0
     for rnd in schedule:
-        task_keys = fold_task_keys(key, jnp.asarray(rnd.task_ids, dtype=jnp.int32))
-        active = jnp.asarray(rnd.active)
-        tree = run_chunk(tree, board, cfg, task_keys, active,
-                         jnp.asarray(rnd.m, dtype=jnp.int32), cp)
+        tree = run_schedule_round(tree, board, cfg, key, rnd, cp)
         playouts += int(rnd.active.sum()) * rnd.m
         masked_lane_iters += int((~rnd.active).sum()) * rnd.m
     jax.block_until_ready(tree.visits)

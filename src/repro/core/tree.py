@@ -22,6 +22,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 NO_NODE = -1  # null child / parent sentinel
 
@@ -195,6 +196,28 @@ def root_move_stats(tree: Tree, n_moves: int) -> tuple[jnp.ndarray, jnp.ndarray]
     wins = jnp.zeros((n_moves + 1,), jnp.float32).at[mv].add(
         jnp.where(valid, tree.wins[safe], 0.0))[:n_moves]
     return visits, wins
+
+
+def root_summary(tree: Tree, n_moves: int) -> dict:
+    """Host-side snapshot of the root decision — "whatever stats the tree
+    has now".
+
+    Dense per-move visit/win vectors (``root_move_stats``), the
+    most-visited move, and the root value, pulled to numpy. This is the
+    retire currency of game-search serving (``repro.serve.games``): a
+    deadline-expired request ships this snapshot mid-search, a finished one
+    ships it at budget exhaustion, and the serving-equivalence suite
+    compares it bit-for-bit against an uninterrupted search's snapshot. A
+    tree with no root children yet reports ``best_move == NO_NODE`` (-1).
+    """
+    visits, wins = root_move_stats(tree, n_moves)
+    return {
+        "root_visits": np.asarray(visits),
+        "root_wins": np.asarray(wins),
+        "best_move": int(best_child(tree)),
+        "root_value": float(root_value(tree)),
+        "tree_nodes": int(tree.n_nodes),
+    }
 
 
 # ------------------------------------------------------------ invariants ----

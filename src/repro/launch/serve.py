@@ -5,6 +5,11 @@ synthetic prompts; ``--scheduler tpfifo`` swaps the lockstep slot engine for
 the work-sharing TPFIFO queue (grain-size-controlled continuous batching,
 DESIGN.md §10) and ``--mcts`` decodes with Grain-Size Controlled MCTS
 instead of greedy sampling (the paper's technique in the serving path).
+
+``--mcts-game {hex,gomoku,mixed}`` serves board-game SEARCH requests
+instead of language-model traffic: ``GameRequest``s through the TPFIFO
+quantum engine's per-game-class slot pools (DESIGN.md §14). Requires
+``--scheduler tpfifo``; no model is instantiated on this path.
 """
 
 from __future__ import annotations
@@ -44,11 +49,26 @@ def main():
                    help="preempt+requeue a request after this many quanta")
     p.add_argument("--mcts", action="store_true",
                    help="decode with GSCPM search instead of greedy")
+    p.add_argument("--mcts-game", default=None,
+                   choices=["hex", "gomoku", "mixed"],
+                   help="serve board-game search requests (no LM) through "
+                        "the TPFIFO game engine; 'mixed' alternates classes")
+    p.add_argument("--board-size", type=int, default=7)
+    p.add_argument("--deadline", type=float, default=None,
+                   help="per-request time-to-move deadline in seconds "
+                        "(game serving only)")
     p.add_argument("--playouts", type=int, default=64)
     p.add_argument("--tasks", type=int, default=16)
     p.add_argument("--workers", type=int, default=4)
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args()
+
+    if args.mcts_game:
+        if args.scheduler != "tpfifo":
+            p.error("--mcts-game requires --scheduler tpfifo "
+                    "(game serving runs on the quantum engine)")
+        serve_games(args)
+        return
 
     cfg = configs.reduced_config(args.arch)
     params = api.init_params(cfg, jax.random.key(args.seed))
@@ -98,6 +118,45 @@ def main():
     if args.scheduler == "tpfifo":    # lockstep engines have no quanta
         line += f", {st.quanta} quanta, {st.n_preemptions} preemptions"
     print(line)
+
+
+def serve_games(args) -> None:
+    """Board-game search traffic through the TPFIFO quantum engine."""
+    from repro.serve.games import GameRequest, TPFIFOGameEngine
+
+    games = (["hex", "gomoku"] if args.mcts_game == "mixed"
+             else [args.mcts_game])
+    eng = TPFIFOGameEngine(n_slots=args.slots, grain=args.grain,
+                           policy=args.policy,
+                           preempt_quanta=args.preempt_quanta,
+                           n_workers=args.workers)
+    rng = np.random.default_rng(args.seed)
+    for rid in range(args.requests):
+        # heterogeneous budgets around --playouts (the irregular workload)
+        npo = max(1, int(args.playouts * rng.choice((0.5, 1.0, 2.0))))
+        eng.submit(GameRequest(rid=rid, game=games[rid % len(games)],
+                               board_size=args.board_size, n_playouts=npo,
+                               n_tasks=args.tasks, seed=args.seed + rid,
+                               deadline_s=args.deadline))
+    t0 = time.perf_counter()
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    playouts = sum(r.result["playouts"] for r in done)
+    print(f"[game tpfifo] served {len(done)} searches, {playouts} playouts "
+          f"in {dt:.1f}s ({playouts/dt:.0f} playouts/s, "
+          f"{args.slots} slots per game class)")
+    for r in done:
+        res = r.result
+        tag = " (deadline)" if res["deadline_expired"] else ""
+        print(f"  req {r.rid}: {res['game']:>6} {res['board_size']}x"
+              f"{res['board_size']} -> move {res['best_move']:>3} "
+              f"value {res['root_value']:+.3f}  {res['playouts']} playouts, "
+              f"{res['rounds']}/{res['rounds_total']} rounds{tag}")
+    st = eng.stats()
+    print(f"  queue wait p50/p95 {st.queue_wait_p50*1e3:.0f}/"
+          f"{st.queue_wait_p95*1e3:.0f} ms, move latency p50/p95 "
+          f"{st.latency_p50*1e3:.0f}/{st.latency_p95*1e3:.0f} ms, "
+          f"{st.quanta} quanta, {st.n_preemptions} preemptions")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,295 @@
+"""Multi-tenant game-search serving: ``Game`` requests through the TPFIFO
+quantum engine (DESIGN.md §14).
+
+The paper's FIFO work-sharing pool schedules one search's task queue;
+this module is the same scheduler serving *strangers' games*. Board-game
+search requests (hex, gomoku, any ``Game``-registry entry) queue in the
+host-side TPFIFO and are served in work quanta of ``m`` GSC-PM schedule
+rounds each — the batched descent + fused playout machinery of
+``core/gscpm``, dispatched through ``run_schedule_round``, exactly the
+calls an uninterrupted ``gscpm_search`` would make.
+
+Layout:
+
+- one FIFO queue for ALL traffic, but a fixed slot pool **per game
+  class**. A game class is the request's ``GSCPMConfig`` — games hash by
+  type (``stamp_game_identity``) and the budget knobs (``n_playouts``,
+  ``n_tasks``, ``cp``, inner scheduler) are ``compare=False``, so the
+  class key is simultaneously ``run_chunk``'s static argument: mixed
+  hex/gomoku traffic with per-request budget/Cp/grain churn compiles
+  exactly ONE quantum program per game class and never cross-recompiles
+  (asserted in tests/test_serve_games.py).
+- per-request budgets: ``n_playouts``/``n_tasks`` fix the request's round
+  schedule (``core/scheduler.make_schedule``), ``cp`` rides into the
+  quantum as a traced operand (PR 3), and ``deadline_s`` is a
+  time-to-move deadline — an expired request retires immediately with
+  whatever root statistics its tree holds (``core/tree.root_summary``),
+  never a crash, never a poisoned slot.
+- tail-requeue preemption reuses ``core/scheduler.quantum_plan`` and the
+  PR 2 progress guard (≥1 committed round per admission segment, and only
+  when a SAME-class request waits — a freed hex slot cannot serve a
+  queued gomoku). A preempted request's device-resident tree rides along
+  in the engine's state table, so resumption continues the identical
+  round sequence: a quantum-served search is **bit-identical** to the
+  same search run uninterrupted. That contract is this module's center of
+  gravity and is pinned by the serving-equivalence test suite.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scheduler as sched
+from repro.core.gscpm import GSCPMConfig, run_schedule_round
+from repro.core.tree import Tree, init_tree, root_summary
+from repro.serve.tpfifo import Ticket, TPFIFODriver
+
+
+# ---------------------------------------------------------------- request ----
+@dataclasses.dataclass
+class GameRequest:
+    """One search-a-move request against a registered ``Game``.
+
+    Duck-typed for ``TPFIFODriver``'s ``Ticket`` (``rid``/``out``/``done``):
+    ``out`` records completed schedule rounds — the progress-guard and
+    telemetry currency, the serving twin of an LM request's generated
+    tokens. ``board`` is an optional ``(n_cells,)`` int8 position (None =
+    the empty board); ``deadline_s`` is the time-to-move budget measured
+    from submission. The answer lands in ``result``: the
+    ``core/tree.root_summary`` snapshot plus serving metadata.
+    """
+
+    rid: Any
+    game: str = "hex"
+    board_size: int = 9
+    to_move: int = 1
+    n_playouts: int = 512
+    n_tasks: int = 16
+    cp: float = 1.0
+    seed: int = 0
+    deadline_s: float | None = None
+    board: Any = None
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+    result: dict | None = None
+
+
+@dataclasses.dataclass
+class _SearchState:
+    """Device-side search of one admitted request.
+
+    Survives preemption (the tree stays device-resident in the engine's
+    state table while the ticket waits at the queue tail), which is what
+    makes resumption literally a continuation of the same round sequence —
+    nothing is replayed, nothing is lost.
+    """
+
+    cfg: GSCPMConfig
+    board: jnp.ndarray
+    key: jax.Array
+    cp: jnp.ndarray
+    schedule: list[sched.Round]
+    tree: Tree
+    round_idx: int = 0
+    playouts: int = 0
+    deadline: float | None = None   # absolute engine-clock instant
+    expired: bool = False
+
+
+# ----------------------------------------------------------------- engine ----
+class TPFIFOGameEngine(TPFIFODriver):
+    """Work-sharing FIFO server for board-game search.
+
+    ``n_slots`` is the slot-pool width PER GAME CLASS (pools materialize
+    lazily as classes appear in traffic); ``grain`` is the quantum size in
+    GSC-PM schedule rounds; ``policy``/``preempt_quanta`` are the PR 2
+    disciplines. Engine-level knobs that shape compiled programs
+    (``n_workers``, ``tree_cap``, ``vl_rounds``, ``select_noise``) are
+    fixed per engine; everything per-request (budget, grain, Cp, deadline,
+    position, seed) is traced or host-only and never recompiles.
+    """
+
+    def __init__(self, n_slots: int = 2, grain: int = 2,
+                 policy: str = "fifo", preempt_quanta: int | None = None,
+                 n_workers: int = 8, vl_rounds: int = 1,
+                 tree_cap: int = 1 << 12, select_noise: float = 1e-3,
+                 inner_scheduler: str = "fifo"):
+        super().__init__(n_slots, grain=grain, policy=policy,
+                         preempt_quanta=preempt_quanta)
+        self.slots_per_class = n_slots
+        self.template = GSCPMConfig(
+            n_workers=n_workers, vl_rounds=vl_rounds, tree_cap=tree_cap,
+            select_noise=select_noise, scheduler=inner_scheduler)
+        # one slot pool per game class; self.active/self.B mirror the
+        # flattened pools so the base driver's has_work/_tick_m accounting
+        # (quantum plans, rebalance widening) applies unchanged
+        self.pools: dict[GSCPMConfig, list[Ticket | None]] = {}
+        self._states: dict[Any, _SearchState] = {}
+        self.active = []
+        self.B = 0
+
+    # -- game classes -----------------------------------------------------
+    def request_cfg(self, req: GameRequest) -> GSCPMConfig:
+        """The request's full search config — also its game-class key.
+
+        ``GSCPMConfig`` hashes/compares only by program-shaping fields
+        (game, board_size, n_workers, tree_cap, ...): budget knobs are
+        ``compare=False``, so requests differing only in
+        n_playouts/n_tasks/cp/scheduler land in ONE pool and reuse ONE
+        compiled quantum. Tests build their uninterrupted reference
+        searches from this same config.
+        """
+        return dataclasses.replace(
+            self.template, game=req.game, board_size=req.board_size,
+            n_playouts=req.n_playouts, n_tasks=req.n_tasks, cp=req.cp)
+
+    def _sync_active(self) -> None:
+        self.active = [t for pool in self.pools.values() for t in pool]
+        self.B = self.slots_per_class * max(1, len(self.pools))
+
+    # -- queue ------------------------------------------------------------
+    def submit(self, req: GameRequest, at: float | None = None):
+        cfg = self.request_cfg(req)
+        game = cfg.game_obj        # raises for unregistered game names
+        if req.board is not None and len(req.board) != game.n_cells:
+            raise ValueError(
+                f"board has {len(req.board)} cells; {req.game} "
+                f"{req.board_size}x{req.board_size} needs {game.n_cells}")
+        if req.n_playouts < 1:
+            raise ValueError(f"n_playouts must be >= 1, got {req.n_playouts}")
+        super().submit(req, at=at)
+
+    # -- TPFIFODriver hooks ----------------------------------------------
+    def _work_estimate(self, t: Ticket) -> int:
+        st = self._states[t.req.rid]
+        return max(1, len(st.schedule) - st.round_idx)
+
+    def _waiting_for(self, t: Ticket) -> bool:
+        # slots are partitioned by class: preempting only helps a queued
+        # request that can occupy the freed slot
+        ck = self.request_cfg(t.req)
+        return any(self.request_cfg(q.req) == ck for q in self.queue)
+
+    def _admit_free_slots(self) -> list[tuple[GSCPMConfig, int]]:
+        """FIFO admission against per-class pools.
+
+        The queue is scanned in submission order; a request whose class
+        pool is full stays queued (later requests of the SAME class cannot
+        overtake it — its pool stays full for them too), while requests of
+        other classes may pass (per-class pools exist precisely so one
+        game's burst cannot head-of-line-block another's).
+        """
+        admitted: list[tuple[GSCPMConfig, int]] = []
+        skipped: collections.deque[Ticket] = collections.deque()
+        while self.queue:
+            t = self.queue.popleft()
+            ck = self.request_cfg(t.req)
+            pool = self.pools.setdefault(ck, [None] * self.slots_per_class)
+            if None not in pool:
+                skipped.append(t)
+                continue
+            s = pool.index(None)
+            if t.req.rid not in self._states:
+                self._states[t.req.rid] = self._make_state(ck, t)
+            if t.t_admit is None:
+                t.t_admit = self._now()
+            t.quanta_at_admit = t.quanta
+            t.seg_base = len(t.req.out)
+            t.plan = sched.quantum_plan(self._work_estimate(t), self.grain,
+                                        self.policy)
+            t.plan_idx = 0
+            t.q_rem = t.plan[0]
+            pool[s] = t
+            self.admission_order.append(t.req.rid)
+            admitted.append((ck, s))
+        self.queue = skipped
+        self._sync_active()
+        return admitted
+
+    def _make_state(self, cfg: GSCPMConfig, t: Ticket) -> _SearchState:
+        req = t.req
+        game = cfg.game_obj
+        board = (game.init_board() if req.board is None
+                 else jnp.asarray(req.board, jnp.int8))
+        return _SearchState(
+            cfg=cfg, board=board, key=jax.random.key(req.seed),
+            cp=jnp.asarray(cfg.cp, jnp.float32),
+            schedule=sched.make_schedule(cfg.n_playouts, cfg.n_tasks,
+                                         cfg.n_workers, cfg.scheduler),
+            tree=init_tree(cfg.tree_cap, game.n_actions, req.to_move),
+            deadline=(None if req.deadline_s is None
+                      else t.t_submit + req.deadline_s))
+
+    # -- tick -------------------------------------------------------------
+    def step(self) -> int:
+        self._admit_free_slots()
+        live = [(ck, s, t) for ck, pool in self.pools.items()
+                for s, t in enumerate(pool) if t is not None]
+        if not live:
+            return 0
+        m = self._tick_m()
+        for _, _, t in live:
+            self._run_slot(t, m)
+        for ck, s, t in live:
+            st = self._states[t.req.rid]
+            if st.expired or st.round_idx >= len(st.schedule):
+                self._retire(ck, s, t)
+            elif self._should_preempt(t):
+                self._preempt(ck, s, t)
+        self._sync_active()
+        return len(live)
+
+    def _run_slot(self, t: Ticket, m: int) -> None:
+        """One quantum: up to ``m`` schedule rounds of this request's
+        search — the exact ``run_schedule_round`` calls (same key, same
+        Round sequence) the uninterrupted driver would make, which is the
+        whole bit-identity argument."""
+        st = self._states[t.req.rid]
+        for _ in range(m):
+            if st.round_idx >= len(st.schedule):
+                break
+            if st.deadline is not None and self._now() >= st.deadline:
+                st.expired = True
+                break
+            rnd = st.schedule[st.round_idx]
+            st.tree = run_schedule_round(st.tree, st.board, st.cfg, st.key,
+                                         rnd, st.cp)
+            st.round_idx += 1
+            st.playouts += int(rnd.active.sum()) * rnd.m
+            t.req.out.append(st.round_idx)   # committed progress
+
+    # -- slot lifecycle ---------------------------------------------------
+    def _retire(self, ck: GSCPMConfig, s: int, t: Ticket) -> None:
+        st = self._states.pop(t.req.rid)
+        jax.block_until_ready(st.tree.visits)
+        res = root_summary(st.tree, st.cfg.game_obj.n_actions)
+        t.t_done = self._now()
+        res.update(
+            game=st.cfg.game, board_size=st.cfg.board_size,
+            playouts=st.playouts, rounds=st.round_idx,
+            rounds_total=len(st.schedule), deadline_expired=st.expired,
+            preemptions=t.preemptions,
+            queue_wait_s=t.t_admit - t.t_submit,
+            latency_s=t.t_done - t.t_submit)
+        self.pools[ck][s] = None
+        t.req.result = res
+        t.req.done = True
+        self.finished.append(t.req)
+        self.finished_tickets.append(t)
+
+    def _preempt(self, ck: GSCPMConfig, s: int, t: Ticket) -> None:
+        """Tail-requeue (round-robin sharing within the class). The tree
+        stays in ``self._states`` — nothing to replay on re-admission."""
+        self.pools[ck][s] = None
+        t.preemptions += 1
+        self.queue.append(t)
+
+
+# the protocol-level name; TPFIFO is the (only) scheduling flavor today
+GameSearchEngine = TPFIFOGameEngine

@@ -65,8 +65,11 @@ from repro.models.common import ModelConfig
 class Ticket:
     """Queue entry wrapping one request, with scheduling state + telemetry.
 
-    ``req`` is duck-typed (``repro.serve.engine.Request``): needs ``rid``,
-    ``prompt``, ``max_new``, ``out``, ``done``.
+    ``req`` is duck-typed: the driver itself needs only ``rid``, ``out``
+    (a list that grows with committed progress — the preemption guard's
+    currency), and ``done``. The LM engines additionally read ``prompt``/
+    ``max_new`` (``repro.serve.engine.Request``); the game-search engine
+    reads its own fields (``repro.serve.games.GameRequest``).
     """
     req: Any
     t_submit: float
@@ -210,6 +213,17 @@ class TPFIFODriver:
         t.preemptions += 1
         self.queue.append(t)
 
+    def _waiting_for(self, t: Ticket) -> bool:
+        """Would preempting ``t`` let queued work run?
+
+        The flat-pool engines say yes whenever anything queues; engines
+        with PARTITIONED slot pools (``repro.serve.games`` keeps one pool
+        per game class) narrow this to waiters that can actually use the
+        freed slot — preempting for a stranger of another class would only
+        idle the slot.
+        """
+        return bool(self.queue)
+
     def _should_preempt(self, t: Ticket, progressed: bool | None = None) -> bool:
         # progress guard: a segment is only preemptible once it has
         # committed a fresh token — otherwise a resumed request whose
@@ -221,7 +235,7 @@ class TPFIFODriver:
                 and self.policy not in ("one_per_core", "sequential")
                 and t.quanta - t.quanta_at_admit >= self.preempt_quanta
                 and progressed
-                and bool(self.queue))
+                and self._waiting_for(t))
 
     # -- grain accounting -------------------------------------------------
     def _work_estimate(self, t: Ticket) -> int:

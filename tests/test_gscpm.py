@@ -1,5 +1,7 @@
 """GSCPM core tests: oracle equivalence, tree invariants, schedulers, quality."""
 
+import collections
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -233,6 +235,51 @@ def test_property_rebalance_stats(n_playouts, tasks, workers):
     assert sr["utilization"] >= sf["utilization"] - 1e-12
     assert all(r.active.all() for r in reb[:-1])
     assert sr["masked_lane_iterations"] < workers
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       grain=st.sampled_from([1, 2, 3, 8]),
+       policy=st.sampled_from(["fifo", "rebalance"]))
+def test_property_quantum_plan_serves_mixed_requests(seed, grain, policy):
+    """`quantum_plan` over a mixed-game request set — the host-side schedule
+    TPFIFO game serving runs on:
+
+    - budget conservation: each request's quanta sum to EXACTLY its GSC-PM
+      round count (rounds are commit points; dropping or duplicating one
+      would break the bit-identity contract);
+    - every quantum makes progress (>=1 round — the PR 2 livelock guard);
+    - round-robin tail-requeue service drains the whole set in at most
+      max-plan-length queue cycles: no request is ever starved by a mix of
+      budgets and game classes.
+    """
+    rng = np.random.default_rng(seed)
+    n_req = int(rng.integers(2, 7))
+    rounds_of = []
+    for _ in range(n_req):
+        sch = scheduler.make_schedule(int(rng.integers(8, 1025)),
+                                      int(2 ** rng.integers(0, 7)),
+                                      int(2 ** rng.integers(1, 4)), "fifo")
+        rounds_of.append(len(sch))
+    plans = [scheduler.quantum_plan(n, grain, policy) for n in rounds_of]
+    for n, plan in zip(rounds_of, plans):
+        assert sum(plan) == n
+        assert min(plan) >= 1
+    queue = collections.deque(range(n_req))
+    rem, nxt, cycles = list(rounds_of), [0] * n_req, 0
+    while queue:
+        cycles += 1
+        for _ in range(len(queue)):
+            r = queue.popleft()
+            q = plans[r][nxt[r]] if nxt[r] < len(plans[r]) else grain
+            served = min(q, rem[r])
+            assert served >= 1          # progress per admission segment
+            rem[r] -= served
+            nxt[r] += 1
+            if rem[r]:
+                queue.append(r)
+    assert all(v == 0 for v in rem)
+    assert cycles <= max(len(p) for p in plans)
 
 
 def test_rng_streams_differ_between_tasks():
