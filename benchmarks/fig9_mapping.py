@@ -5,13 +5,53 @@ against the analytic work/span bound with a dispatch burden fitted from the
 measured per-round overhead — reproducing the paper's observation that
 measured speedup tracks the bound up to ~256 tasks and then departs due to
 scheduling overheads.
+
+Two burden fits produce two bound curves per point:
+
+- ``bound`` — the original single-point calibration: solve ``t_round`` so
+  the bound meets the measured speedup at the finest grain;
+- ``bound_measured`` — the observability-plane fit (DESIGN.md §15): traced
+  searches across the grain sweep record per-round ``gscpm_round`` spans,
+  ``repro.obsv.profile.fit_dispatch_profile`` least-squares the per-round
+  dispatch cost and per-iteration device cost out of the span durations,
+  and the resulting ``DagModel`` carries MEASURED ``t_spawn``/``t_round``
+  instead of guessed constants.
 """
 
 from __future__ import annotations
 
+import jax
+
+from repro.core import game as game_mod
 from repro.core.cilkview import DagModel, speedup_bound
+from repro.core.gscpm import GSCPMConfig, gscpm_search
 
 from benchmarks import fig7_speedup
+
+
+def measure_dispatch_profile(n_playouts: int, n_workers: int,
+                             board_size: int, task_counts,
+                             seed: int = 0) -> dict:
+    """Traced searches across the grain sweep -> fitted burden terms.
+
+    One warm-up search per grain compiles the program (compile-tainted
+    spans are additionally excluded by the fitter); the traced pass blocks
+    per round, so span durations include the device work they dispatched.
+    """
+    from repro.obsv import TraceRecorder
+    from repro.obsv.profile import fit_dispatch_profile
+
+    tracer = TraceRecorder(process_name="fig9-profile")
+    board = game_mod.make_game("hex", board_size).init_board()
+    key = jax.random.key(seed)
+    tree_cap = max(1 << 14, 4 * n_playouts)
+    for n_tasks in task_counts:
+        cfg = GSCPMConfig(game="hex", board_size=board_size,
+                          n_playouts=n_playouts, n_tasks=n_tasks,
+                          n_workers=n_workers, tree_cap=tree_cap)
+        gscpm_search(board, 1, cfg, key)              # warm-up/compile
+        gscpm_search(board, 1, cfg, key, tracer=tracer)
+    return fit_dispatch_profile(tracer, n_workers=n_workers)
 
 
 def run(n_playouts: int = 2048, n_workers: int = 16,
@@ -34,6 +74,13 @@ def run(n_playouts: int = 2048, n_workers: int = 16,
     tp_needed = t1 / max(meas_fine, 1e-9)
     t_round = max(0.0, (tp_needed - max(t1 / n_workers, tinf)) / rounds)
 
+    # the observability-plane fit: measured spans -> measured burden terms
+    from repro.obsv.profile import measured_dag_model
+    profile = measure_dispatch_profile(
+        n_playouts, n_workers, board_size,
+        task_counts=sorted({int(t) for t in pts})[-3:])
+    model_measured = measured_dag_model(profile)
+
     model = DagModel(t_iter=t_iter, t_spawn=0.002, t_round=t_round)
     overlay = {}
     for t_str, p in pts.items():
@@ -42,11 +89,15 @@ def run(n_playouts: int = 2048, n_workers: int = 16,
         overlay[t_str] = {
             "measured": p["speedup"],
             "bound": speedup_bound(t, g, n_workers, model),
+            "bound_measured": speedup_bound(t, g, n_workers, model_measured),
         }
     return {
         "n_playouts": n_playouts,
         "n_workers": n_workers,
         "fitted_t_round": t_round,
+        "measured_t_round": profile["t_round_units"],
+        "measured_t_spawn": profile["t_spawn_units"],
+        "dispatch_profile": profile,
         "sequential_playouts_per_s": seq_rate,
         "overlay": overlay,
     }

@@ -113,7 +113,9 @@ def write_mcts_trajectory(results: dict) -> str | None:
     seq = fig7["sequential_playouts_per_s"]
     payload = {
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "git_sha": _git_sha(),
         "backend": jax.default_backend(),
+        "host_cores": os.cpu_count(),
         "board": fig7["board"],
         "n_workers": fig7["n_workers"],
         "n_playouts": fig7["n_playouts"],
@@ -156,6 +158,19 @@ def write_mcts_trajectory(results: dict) -> str | None:
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
     return os.path.abspath(path)
+
+
+def _git_sha() -> str | None:
+    """Commit the trajectory point describes (None outside a git checkout —
+    the artifact must never make the benchmark run fail)."""
+    import subprocess
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)), timeout=10,
+            check=True).stdout.strip()
+    except Exception:
+        return None
 
 
 def _summ(name: str, res: dict) -> dict:

@@ -50,6 +50,23 @@ def speedup_bound(n_tasks: int, grain: int, n_cores: int, m: DagModel) -> float:
     return t1 / tp
 
 
+def burdened_span(n_tasks: int, grain: int, n_cores: int,
+                  m: DagModel) -> float:
+    """Span plus the serial dispatch burden the P-core execution pays: each
+    of the ceil(nTasks/P) rounds costs one host dispatch (``t_round``)."""
+    rounds = int(np.ceil(n_tasks / n_cores))
+    return span(n_tasks, grain, m) + rounds * m.t_round
+
+
+def burdened_parallelism(n_tasks: int, grain: int, n_cores: int,
+                         m: DagModel) -> float:
+    """Cilkview's *burdened parallelism*: T1 over the burdened span — the
+    parallelism estimate that survives scheduling overhead, which is what a
+    MEASURED dag model (``repro.obsv.profile.measured_dag_model``) makes
+    honest for the Fig 9 overlay."""
+    return work(n_tasks, grain, m) / burdened_span(n_tasks, grain, n_cores, m)
+
+
 def profile(n_playouts: int, task_counts: list[int], core_counts: list[int],
             m: DagModel | None = None) -> dict[int, list[float]]:
     """speedup_bound curves: {n_tasks: [bound per core count]} (paper Fig 5)."""

@@ -33,6 +33,7 @@ the paper's Table I; the scheduling disciplines live in
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import time
@@ -90,6 +91,11 @@ class GSCPMConfig:
     scheduler: str = dataclasses.field(default="fifo", compare=False)
     descent: str = "batched"        # batched (level-synchronous) | scalar (oracle)
     playout: str = "batched"        # batched (fused (W, cells)) | scalar (oracle)
+    # device-plane observability (DESIGN.md §15): thread a SearchMetrics
+    # accumulator through the compiled chunks. HASHED static flag: each
+    # game class compiles exactly two programs (metrics on / off), and the
+    # search results are bit-identical either way (tests/test_obsv.py).
+    metrics: bool = False
 
     @property
     def game_obj(self):
@@ -326,7 +332,8 @@ def expand_batch(tree: Tree, leaves: jnp.ndarray, moves: jnp.ndarray,
 
 # ---------------------------------------------------------- sync iteration ----
 def sync_iteration(tree: Tree, root_board: jnp.ndarray, cfg: GSCPMConfig,
-                   cp, iter_keys: jnp.ndarray, active: jnp.ndarray) -> Tree:
+                   cp, iter_keys: jnp.ndarray, active: jnp.ndarray,
+                   metrics=None):
     """One batched GSCPM iteration of width W = cfg.n_workers.
 
     ``cp`` is the traced exploration constant (never read from cfg here —
@@ -336,6 +343,12 @@ def sync_iteration(tree: Tree, root_board: jnp.ndarray, cfg: GSCPMConfig,
     phase defaults to the fused (W, cells) ``game.playout_batch`` and
     ``cfg.playout == "scalar"`` keeps the per-lane ``game.playout_scalar``
     oracle (bit-identical values under the same RNG schedule).
+
+    ``metrics`` (a ``repro.obsv.SearchMetrics`` accumulator, or None)
+    selects the return shape: with an accumulator the call returns
+    ``(tree, metrics)``; the metric updates are pure extra reductions over
+    values this function computes anyway — no RNG consumed, nothing fed
+    back — so the produced tree is bit-identical either way.
     """
     game = cfg.game_obj
     W = cfg.n_workers
@@ -391,6 +404,7 @@ def sync_iteration(tree: Tree, root_board: jnp.ndarray, cfg: GSCPMConfig,
     moves = outs[4].reshape(W)
     po_keys = outs[5].reshape(W, *outs[5].shape[2:])
 
+    n_nodes_before = tree.n_nodes
     tree, new_ids = expand_batch(tree, leaves, moves, active)
 
     expanded = new_ids < tree.cap
@@ -416,21 +430,47 @@ def sync_iteration(tree: Tree, root_board: jnp.ndarray, cfg: GSCPMConfig,
         # all W lanes (bit-identical values to the oracle above —
         # tests/test_game_protocol.py)
         winners = game.playout_batch(b2, nxt, po_keys)
-    return backup_paths(tree, paths, winners, active.astype(jnp.float32))
+    tree = backup_paths(tree, paths, winners, active.astype(jnp.float32))
+    if metrics is None:
+        return tree
+    from repro.obsv.search_metrics import accumulate_iteration
+
+    metrics = accumulate_iteration(
+        metrics, depths_grouped=outs[1], active=active, leaves=leaves,
+        moves=moves, eval_boards=b2, n_nodes_before=n_nodes_before,
+        n_nodes_after=tree.n_nodes)
+    return tree, metrics
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0,))
 def run_chunk(tree: Tree, root_board: jnp.ndarray, cfg: GSCPMConfig,
               task_keys: jnp.ndarray, active: jnp.ndarray,
-              m: jnp.ndarray, cp) -> Tree:
+              m: jnp.ndarray, cp, metrics=None):
     """Run `m` sync iterations (one task-grain per lane) — jitted once per
-    cfg; ``m`` and ``cp`` are traced, so grain/Cp sweeps never retrace."""
+    cfg; ``m`` and ``cp`` are traced, so grain/Cp sweeps never retrace.
 
-    def body(i, tr):
+    With ``cfg.metrics`` a ``SearchMetrics`` accumulator must ride along
+    and the chunk returns ``(tree, metrics)`` — the flag is hashed, so a
+    game class owns exactly TWO compiled programs: one per metrics arm.
+    """
+    if cfg.metrics != (metrics is not None):     # trace-time consistency
+        raise ValueError(
+            f"cfg.metrics={cfg.metrics} but metrics accumulator "
+            f"{'missing' if metrics is None else 'provided'} — pass "
+            "repro.obsv.init_search_metrics() iff the flag is set")
+
+    def body(i, carry):
+        tr, mx = carry
         iter_keys = jax.vmap(lambda tk: jax.random.fold_in(tk, i))(task_keys)
-        return sync_iteration(tr, root_board, cfg, cp, iter_keys, active)
+        if cfg.metrics:
+            tr, mx = sync_iteration(tr, root_board, cfg, cp, iter_keys,
+                                    active, mx)
+        else:
+            tr = sync_iteration(tr, root_board, cfg, cp, iter_keys, active)
+        return tr, mx
 
-    return jax.lax.fori_loop(0, m, body, tree)
+    tree, metrics = jax.lax.fori_loop(0, m, body, (tree, metrics))
+    return (tree, metrics) if cfg.metrics else tree
 
 
 # ------------------------------------------------------------------ driver ----
@@ -442,7 +482,7 @@ def fold_task_keys(key: jax.Array, task_ids: jnp.ndarray) -> jax.Array:
 
 
 def run_schedule_round(tree: Tree, board: jnp.ndarray, cfg: GSCPMConfig,
-                       key: jax.Array, rnd: sched.Round, cp) -> Tree:
+                       key: jax.Array, rnd: sched.Round, cp, metrics=None):
     """Advance one schedule ``Round``: the atomic dispatch unit of a search.
 
     Both the uninterrupted driver (``gscpm_search``) and the TPFIFO
@@ -451,17 +491,34 @@ def run_schedule_round(tree: Tree, board: jnp.ndarray, cfg: GSCPMConfig,
     ``rnd.task_ids``), never on wall-clock interleaving, so a search served
     in grain-sized quanta with preemptions in between is BIT-IDENTICAL to
     the same round sequence run back to back (pinned in
-    tests/test_serve_games.py).
+    tests/test_serve_games.py). With ``cfg.metrics`` the accumulator rides
+    along and the round returns ``(tree, metrics)``.
     """
     task_keys = fold_task_keys(key, jnp.asarray(rnd.task_ids, dtype=jnp.int32))
-    return run_chunk(tree, board, cfg, task_keys, jnp.asarray(rnd.active),
-                     jnp.asarray(rnd.m, dtype=jnp.int32), cp)
+    args = (tree, board, cfg, task_keys, jnp.asarray(rnd.active),
+            jnp.asarray(rnd.m, dtype=jnp.int32), cp)
+    if cfg.metrics:
+        return run_chunk(*args, metrics)
+    return run_chunk(*args)
 
 
 def gscpm_search(board: jnp.ndarray, to_move: int, cfg: GSCPMConfig,
-                 key: jax.Array) -> tuple[Tree, dict[str, Any]]:
-    """Full GSCPM search (paper Fig 4): schedule tasks, return tree + stats."""
+                 key: jax.Array, *, tracer=None) -> tuple[Tree, dict[str, Any]]:
+    """Full GSCPM search (paper Fig 4): schedule tasks, return tree + stats.
+
+    ``cfg.metrics`` adds a device-plane ``SearchMetrics`` summary under
+    ``stats["metrics"]`` (one host readback at the end of the search).
+    ``tracer`` (a ``repro.obsv.TraceRecorder``) records one ``gscpm_round``
+    span per schedule round, annotated with the round's work so
+    ``obsv.profile`` can fit the measured dispatch burden; tracing blocks
+    on the device after every round to attribute device time to its round
+    — a profiling mode, not the fastest way to run a search.
+    """
     tree = init_tree(cfg.tree_cap, cfg.game_obj.n_actions, to_move)
+    metrics = None
+    if cfg.metrics:
+        from repro.obsv.search_metrics import init_search_metrics
+        metrics = init_search_metrics()
     schedule = sched.make_schedule(
         cfg.n_playouts, cfg.n_tasks, cfg.n_workers, cfg.scheduler)
 
@@ -470,7 +527,18 @@ def gscpm_search(board: jnp.ndarray, to_move: int, cfg: GSCPMConfig,
     playouts = 0
     masked_lane_iters = 0
     for rnd in schedule:
-        tree = run_schedule_round(tree, board, cfg, key, rnd, cp)
+        span = (tracer.span("gscpm_round", {
+            "rounds": 1, "iterations": int(rnd.m),
+            "lane_iterations": int(rnd.active.sum()) * rnd.m,
+            "tasks": int(rnd.active.sum()), "workers": cfg.n_workers,
+            "game": cfg.game}) if tracer else contextlib.nullcontext())
+        with span:
+            out = run_schedule_round(tree, board, cfg, key, rnd, cp, metrics)
+            tree, metrics = out if cfg.metrics else (out, metrics)
+            if tracer:
+                jax.block_until_ready(tree.visits)
+        if tracer:
+            tracer.poll_compiles()
         playouts += int(rnd.active.sum()) * rnd.m
         masked_lane_iters += int((~rnd.active).sum()) * rnd.m
     jax.block_until_ready(tree.visits)
@@ -488,4 +556,8 @@ def gscpm_search(board: jnp.ndarray, to_move: int, cfg: GSCPMConfig,
         "root_value": float(root_value(tree)),
         "best_move": int(best_child(tree)),
     }
+    if cfg.metrics:
+        from repro.obsv.search_metrics import summarize_metrics
+        stats["metrics"] = summarize_metrics(metrics)
     return tree, stats
+

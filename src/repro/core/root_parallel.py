@@ -31,6 +31,7 @@ see ``repro.serve.mcts_decode.mcts_decode_search_batch`` for the LM twin).
 
 from __future__ import annotations
 
+import contextlib
 import functools
 import time
 from typing import Any, NamedTuple
@@ -55,7 +56,7 @@ from repro.core.tree import (
 # ----------------------------------------------------------- forest chunk ----
 def _forest_chunk(forest: Tree, boards: jnp.ndarray, cfg: GSCPMConfig,
                   task_keys: jnp.ndarray, active: jnp.ndarray,
-                  m: jnp.ndarray, cp) -> Tree:
+                  m: jnp.ndarray, cp, metrics=None):
     """`gscpm.run_chunk` vmapped over the ensemble axis — one program for E
     trees. All members share the round's grain `m` and traced ``cp``;
     per-member RNG streams keep their searches decorrelated. The batched
@@ -64,16 +65,35 @@ def _forest_chunk(forest: Tree, boards: jnp.ndarray, cfg: GSCPMConfig,
     so does the fused playout stage: the whole forest's leaf evaluations
     become one (E·W, cells) batched ``game.playout_batch`` under vmap
     (DESIGN.md §12/§13 — for Hex a single fill + connectivity solve with
-    one convergence loop) instead of E·W interleaved scalar while-loops."""
+    one convergence loop) instead of E·W interleaved scalar while-loops.
+    ``cfg.metrics`` threads a per-member ``SearchMetrics`` accumulator
+    ((E,)-leaf pytree, ``init_search_metrics_forest``) through the same
+    vmap and returns ``(forest, metrics)``."""
+    if cfg.metrics != (metrics is not None):
+        raise ValueError(
+            "cfg.metrics and the metrics accumulator must agree: "
+            f"cfg.metrics={cfg.metrics}, metrics "
+            f"{'passed' if metrics is not None else 'omitted'}")
 
-    def one_tree(tree, board, keys, act):
-        def body(i, tr):
+    def one_tree(tree, board, keys, act, mx):
+        def body(i, carry):
+            tr, acc = carry
             iter_keys = jax.vmap(lambda tk: jax.random.fold_in(tk, i))(keys)
-            return sync_iteration(tr, board, cfg, cp, iter_keys, act)
+            if cfg.metrics:
+                tr, acc = sync_iteration(tr, board, cfg, cp, iter_keys,
+                                         act, acc)
+            else:
+                tr = sync_iteration(tr, board, cfg, cp, iter_keys, act)
+            return tr, acc
 
-        return jax.lax.fori_loop(0, m, body, tree)
+        return jax.lax.fori_loop(0, m, body, (tree, mx))
 
-    return jax.vmap(one_tree)(forest, boards, task_keys, active)
+    if cfg.metrics:
+        return jax.vmap(one_tree)(forest, boards, task_keys, active, metrics)
+    forest, _ = jax.vmap(
+        lambda t, b, k, a: one_tree(t, b, k, a, 0))(
+            forest, boards, task_keys, active)
+    return forest
 
 
 run_chunk_forest = jax.jit(_forest_chunk, static_argnames=("cfg",),
@@ -208,7 +228,7 @@ def sync_root_stats(forest: Tree, state: RootSyncState, n_moves: int
 # ------------------------------------------------------------------ driver ----
 def gscpm_search_batch(boards: jnp.ndarray, to_move, cfg: GSCPMConfig,
                        key: jax.Array, *, n_trees: int | None = None,
-                       merge_every: int = 0
+                       merge_every: int = 0, tracer=None
                        ) -> tuple[Tree, dict[str, Any]]:
     """Root-parallel GSCPM over E trees in one jitted program per round.
 
@@ -219,6 +239,9 @@ def gscpm_search_batch(boards: jnp.ndarray, to_move, cfg: GSCPMConfig,
 
     Per-round work is ONE dispatch of ``run_chunk_forest`` — no per-tree
     Python loop; with multiple devices the ensemble axis is sharded.
+    ``cfg.metrics`` adds a whole-ensemble ``stats["metrics"]`` summary;
+    ``tracer`` records per-round ``gscpm_round`` spans (blocking per round,
+    a profiling mode — see ``gscpm.gscpm_search``).
     """
     boards = jnp.asarray(boards)
     if boards.ndim == 1:
@@ -237,6 +260,10 @@ def gscpm_search_batch(boards: jnp.ndarray, to_move, cfg: GSCPMConfig,
     schedule = sched.make_schedule(
         cfg.n_playouts, cfg.n_tasks, cfg.n_workers, cfg.scheduler)
     state = init_sync_state(E, n_moves) if merge_every > 0 else None
+    metrics = None
+    if cfg.metrics:
+        from repro.obsv.search_metrics import init_search_metrics_forest
+        metrics = init_search_metrics_forest(E)
 
     cp = jnp.asarray(cfg.cp, jnp.float32)
     t0 = time.perf_counter()
@@ -246,8 +273,18 @@ def gscpm_search_batch(boards: jnp.ndarray, to_move, cfg: GSCPMConfig,
         task_keys = fold_member_task_keys(
             member_keys, jnp.asarray(rnd.task_ids, dtype=jnp.int32))
         active = jnp.tile(jnp.asarray(rnd.active)[None, :], (E, 1))
-        forest = run_chunk_forest(forest, boards, cfg, task_keys, active,
-                                  jnp.asarray(rnd.m, dtype=jnp.int32), cp)
+        span_args = {"rounds": 1, "iterations": int(rnd.m),
+                     "lane_iterations": E * int(rnd.active.sum()) * rnd.m,
+                     "tasks": E * int(rnd.active.sum()),
+                     "workers": E * cfg.n_workers, "game": cfg.game}
+        with (tracer.span("gscpm_round", span_args) if tracer
+              else contextlib.nullcontext()):
+            out = run_chunk_forest(forest, boards, cfg, task_keys, active,
+                                   jnp.asarray(rnd.m, dtype=jnp.int32), cp,
+                                   metrics)
+            forest, metrics = out if cfg.metrics else (out, metrics)
+            if tracer:
+                jax.block_until_ready(forest.visits)
         playouts_per_tree += int(rnd.active.sum()) * rnd.m
         if merge_every > 0 and ((r + 1) % merge_every == 0
                                 or r == len(schedule) - 1):
@@ -274,6 +311,9 @@ def gscpm_search_batch(boards: jnp.ndarray, to_move, cfg: GSCPMConfig,
         "best_move_sum": int(summary["best_move_sum"]),
         "best_move_vote": int(summary["best_move_vote"]),
     }
+    if cfg.metrics:
+        from repro.obsv.search_metrics import summarize_metrics
+        stats["metrics"] = summarize_metrics(metrics)
     return forest, stats
 
 

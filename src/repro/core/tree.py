@@ -220,6 +220,25 @@ def root_summary(tree: Tree, n_moves: int) -> dict:
     }
 
 
+def node_depths(tree: Tree) -> np.ndarray:
+    """Host-side per-node depth (root = 0); unallocated slots report -1.
+
+    Walks parent pointers in allocation order — ``expand_batch`` only ever
+    attaches new nodes to existing ones, so ``parent[i] < i`` and a single
+    forward pass resolves every depth. Used by the observability tests to
+    cross-check the device-plane depth counters (``repro.obsv``) against
+    the tree the search actually built.
+    """
+    parent = np.asarray(tree.parent)[:-1]      # drop the null slot
+    n = int(tree.n_nodes)
+    depth = np.full(parent.shape, -1, np.int64)
+    if n > 0:
+        depth[0] = 0
+    for i in range(1, n):
+        depth[i] = depth[parent[i]] + 1
+    return depth
+
+
 # ------------------------------------------------------------ invariants ----
 def check_invariants(tree: Tree, *, discrete_credits: bool = True) -> None:
     """Host-side structural invariant checks (used by the property tests).

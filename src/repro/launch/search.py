@@ -38,19 +38,34 @@ def main():
     p.add_argument("--cp", type=float, default=1.0)
     p.add_argument("--to-move", type=int, default=1, choices=[1, 2])
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--metrics", action="store_true",
+                   help="thread the device-plane SearchMetrics accumulator "
+                        "through the search and print its summary "
+                        "(bit-identical results, one extra compiled "
+                        "program)")
+    p.add_argument("--trace", default=None, metavar="OUT.json",
+                   help="record per-round spans as Chrome/Perfetto trace-"
+                        "event JSON (blocks per round while tracing)")
     args = p.parse_args()
 
     cfg = GSCPMConfig(game=args.game, board_size=args.size,
                       n_playouts=args.playouts, n_tasks=args.tasks,
                       n_workers=args.workers, cp=args.cp,
                       scheduler=args.scheduler,
-                      tree_cap=max(1 << 14, 4 * args.playouts))
+                      tree_cap=max(1 << 14, 4 * args.playouts),
+                      metrics=args.metrics)
     board = cfg.game_obj.init_board()
     key = jax.random.key(args.seed)
+    tracer = None
+    if args.trace:
+        from repro.obsv import TraceRecorder
+        tracer = TraceRecorder(process_name="repro-search")
+        from repro.core import gscpm as gscpm_mod
+        tracer.watch_compiles("run_chunk", gscpm_mod.run_chunk)
 
     if args.trees > 1:
         _, st = gscpm_search_batch(board, args.to_move, cfg, key,
-                                   n_trees=args.trees)
+                                   n_trees=args.trees, tracer=tracer)
         print(f"[{args.game} {args.size}x{args.size}] {st['n_trees']} trees, "
               f"{st['playouts']} playouts in {st['time_s']:.2f}s "
               f"({st['playouts_per_s']:.0f}/s, grain m={st['grain']})")
@@ -58,13 +73,25 @@ def main():
               f"(majority vote) {st['best_move_vote']}; "
               f"member values {['%.3f' % v for v in st['member_root_values']]}")
     else:
-        _, st = gscpm_search(board, args.to_move, cfg, key)
+        _, st = gscpm_search(board, args.to_move, cfg, key, tracer=tracer)
         print(f"[{args.game} {args.size}x{args.size}] {st['playouts']} "
               f"playouts in {st['time_s']:.2f}s "
               f"({st['playouts_per_s']:.0f}/s, grain m={st['grain']}, "
               f"{st['tree_nodes']} nodes)")
         print(f"  best move {st['best_move']}, "
               f"root value {st['root_value']:.3f}")
+    if args.metrics:
+        dm = st["metrics"]
+        print(f"  device metrics: depth mean/max {dm['depth_mean']:.2f}/"
+              f"{dm['depth_max']}, {dm['expansions']} expansions "
+              f"({dm['expand_collision_rate']:.2f} collision rate), "
+              f"playout len mean/max {dm['playout_len_mean']:.1f}/"
+              f"{dm['playout_len_max']}, held levels {dm['held_levels']}, "
+              f"peak {dm['tree_nodes_peak']} nodes")
+    if tracer is not None:
+        from repro.obsv import validate_trace
+        path = tracer.save(args.trace)
+        print(f"  trace: {validate_trace(path)} events -> {path}")
 
 
 if __name__ == "__main__":

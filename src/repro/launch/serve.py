@@ -27,6 +27,30 @@ from repro.serve.mcts_decode import MCTSDecodeConfig
 from repro.serve.tpfifo import TPFIFOEngine, TPFIFOMCTSEngine
 
 
+def make_observers(args):
+    """--trace / --metrics-out -> (TraceRecorder | None, Registry | None)."""
+    tracer = registry = None
+    if args.trace:
+        from repro.obsv import TraceRecorder
+        tracer = TraceRecorder(process_name="repro-serve")
+    if args.metrics_out:
+        from repro.obsv import MetricsRegistry
+        registry = MetricsRegistry()
+    return tracer, registry
+
+
+def finish_observers(args) -> None:
+    """Write (and structurally validate) the observability artifacts."""
+    if args.tracer is not None:
+        from repro.obsv import validate_trace
+        path = args.tracer.save(args.trace)
+        n = validate_trace(path)
+        print(f"  trace: {n} events -> {path} "
+              f"(open in chrome://tracing or ui.perfetto.dev)")
+    if args.registry is not None:
+        print(f"  metrics snapshot -> {args.registry.save(args.metrics_out)}")
+
+
 def main():
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default="smollm-135m", choices=list(configs.ARCHS))
@@ -61,7 +85,20 @@ def main():
     p.add_argument("--tasks", type=int, default=16)
     p.add_argument("--workers", type=int, default=4)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--trace", default=None, metavar="OUT.json",
+                   help="record a Chrome/Perfetto trace of the serve run "
+                        "(admissions, quanta, preemptions, deadline "
+                        "expiries, jit compiles) to this file — open in "
+                        "chrome://tracing or ui.perfetto.dev")
+    p.add_argument("--metrics-out", default=None, metavar="OUT.json",
+                   help="write a MetricsRegistry counter/gauge snapshot "
+                        "(JSON) at the end of the run")
+    p.add_argument("--device-metrics", action="store_true",
+                   help="thread the device-plane SearchMetrics accumulator "
+                        "through every served search (game serving only; "
+                        "results stay bit-identical)")
     args = p.parse_args()
+    args.tracer, args.registry = make_observers(args)
 
     if args.mcts_game:
         if args.scheduler != "tpfifo":
@@ -83,20 +120,24 @@ def main():
                                    max_prompt_len=max_plen, grain=args.grain,
                                    policy=args.policy,
                                    preempt_quanta=args.preempt_quanta,
-                                   seed=args.seed)
+                                   seed=args.seed, tracer=args.tracer,
+                                   registry=args.registry)
         else:
             eng = MCTSSlotEngine(params, cfg, dcfg, n_slots=args.slots,
-                                 max_prompt_len=max_plen, seed=args.seed)
+                                 max_prompt_len=max_plen, seed=args.seed,
+                                 tracer=args.tracer, registry=args.registry)
     elif args.scheduler == "tpfifo":
         eng = TPFIFOEngine(params, cfg, n_slots=args.slots,
                            max_len=args.prompt_len + args.max_new + 8,
                            grain=args.grain, policy=args.policy,
                            preempt_quanta=args.preempt_quanta,
-                           temperature=args.temperature, seed=args.seed)
+                           temperature=args.temperature, seed=args.seed,
+                           tracer=args.tracer, registry=args.registry)
     else:
         eng = SlotEngine(params, cfg, n_slots=args.slots,
                          max_len=args.prompt_len + args.max_new + 8,
-                         temperature=args.temperature, seed=args.seed)
+                         temperature=args.temperature, seed=args.seed,
+                         tracer=args.tracer, registry=args.registry)
 
     for rid in range(args.requests):
         plen = int(rng.integers(4, args.prompt_len + 1))
@@ -118,6 +159,7 @@ def main():
     if args.scheduler == "tpfifo":    # lockstep engines have no quanta
         line += f", {st.quanta} quanta, {st.n_preemptions} preemptions"
     print(line)
+    finish_observers(args)
 
 
 def serve_games(args) -> None:
@@ -129,7 +171,9 @@ def serve_games(args) -> None:
     eng = TPFIFOGameEngine(n_slots=args.slots, grain=args.grain,
                            policy=args.policy,
                            preempt_quanta=args.preempt_quanta,
-                           n_workers=args.workers)
+                           n_workers=args.workers,
+                           metrics=args.device_metrics,
+                           tracer=args.tracer, registry=args.registry)
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         # heterogeneous budgets around --playouts (the irregular workload)
@@ -157,6 +201,14 @@ def serve_games(args) -> None:
           f"{st.queue_wait_p95*1e3:.0f} ms, move latency p50/p95 "
           f"{st.latency_p50*1e3:.0f}/{st.latency_p95*1e3:.0f} ms, "
           f"{st.quanta} quanta, {st.n_preemptions} preemptions")
+    if args.device_metrics and done:
+        dm = done[0].result["metrics"]
+        print(f"  device metrics (req {done[0].rid}): "
+              f"depth mean/max {dm['depth_mean']:.2f}/{dm['depth_max']}, "
+              f"{dm['expansions']} expansions, "
+              f"playout len mean {dm['playout_len_mean']:.1f}, "
+              f"leaf-collision rate {dm['leaf_collision_rate']:.2f}")
+    finish_observers(args)
 
 
 if __name__ == "__main__":

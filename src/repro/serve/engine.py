@@ -93,8 +93,9 @@ class SlotEngine(TPFIFODriver):
     """
 
     def __init__(self, params, cfg: ModelConfig, n_slots: int, max_len: int,
-                 temperature: float = 0.0, eos_id: int = 2, seed: int = 0):
-        super().__init__(n_slots)
+                 temperature: float = 0.0, eos_id: int = 2, seed: int = 0,
+                 tracer=None, registry=None):
+        super().__init__(n_slots, tracer=tracer, registry=registry)
         self.params = params
         self.cfg = cfg
         self.max_len = max_len
@@ -205,8 +206,9 @@ class MCTSSlotEngine(TPFIFODriver):
     """
 
     def __init__(self, params, cfg: ModelConfig, dcfg, n_slots: int,
-                 max_prompt_len: int, eos_id: int = 2, seed: int = 0):
-        super().__init__(n_slots)
+                 max_prompt_len: int, eos_id: int = 2, seed: int = 0,
+                 tracer=None, registry=None):
+        super().__init__(n_slots, tracer=tracer, registry=registry)
         self.params = params
         self.cfg = cfg
         self.dcfg = dcfg

@@ -38,6 +38,7 @@ Layout:
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 from typing import Any
 
@@ -100,6 +101,7 @@ class _SearchState:
     playouts: int = 0
     deadline: float | None = None   # absolute engine-clock instant
     expired: bool = False
+    metrics: Any = None             # SearchMetrics accumulator (cfg.metrics)
 
 
 # ----------------------------------------------------------------- engine ----
@@ -113,19 +115,36 @@ class TPFIFOGameEngine(TPFIFODriver):
     (``n_workers``, ``tree_cap``, ``vl_rounds``, ``select_noise``) are
     fixed per engine; everything per-request (budget, grain, Cp, deadline,
     position, seed) is traced or host-only and never recompiles.
+
+    ``metrics=True`` turns on the device-plane ``SearchMetrics`` plane for
+    every served search (DESIGN.md §15): each request's accumulator rides
+    its quanta (surviving preemption alongside the tree) and lands in
+    ``result["metrics"]`` at retirement. It is a HASHED config field, so a
+    metrics engine's game classes compile their own (second) quantum
+    program — still one per class, still bit-identical results.
+    ``tracer``/``registry`` enable the host plane (see ``TPFIFODriver``),
+    adding per-quantum ``X`` spans annotated with the round/iteration work
+    they covered — the spans ``repro.obsv.profile`` fits burden terms from
+    — plus deadline-expiry instants and device-sync spans at retirement.
     """
 
     def __init__(self, n_slots: int = 2, grain: int = 2,
                  policy: str = "fifo", preempt_quanta: int | None = None,
                  n_workers: int = 8, vl_rounds: int = 1,
                  tree_cap: int = 1 << 12, select_noise: float = 1e-3,
-                 inner_scheduler: str = "fifo"):
+                 inner_scheduler: str = "fifo", metrics: bool = False,
+                 tracer=None, registry=None):
         super().__init__(n_slots, grain=grain, policy=policy,
-                         preempt_quanta=preempt_quanta)
+                         preempt_quanta=preempt_quanta, tracer=tracer,
+                         registry=registry)
         self.slots_per_class = n_slots
         self.template = GSCPMConfig(
             n_workers=n_workers, vl_rounds=vl_rounds, tree_cap=tree_cap,
-            select_noise=select_noise, scheduler=inner_scheduler)
+            select_noise=select_noise, scheduler=inner_scheduler,
+            metrics=metrics)
+        if tracer is not None:
+            from repro.core.gscpm import run_chunk
+            tracer.watch_compiles("run_chunk", run_chunk)
         # one slot pool per game class; self.active/self.B mirror the
         # flattened pools so the base driver's has_work/_tick_m accounting
         # (quantum plans, rebalance widening) applies unchanged
@@ -208,6 +227,15 @@ class TPFIFOGameEngine(TPFIFODriver):
             pool[s] = t
             self.admission_order.append(t.req.rid)
             admitted.append((ck, s))
+            if self.tracer:
+                self.tracer.instant("admission", {
+                    "rid": t.req.rid, "game": ck.game, "slot": s,
+                    "resumed": t.preemptions > 0,
+                    "wait_s": round(t.t_admit - t.t_submit, 6)})
+            if self.registry:
+                self.registry.counter(
+                    "serve_admissions_total",
+                    "requests admitted into a device slot").inc()
         self.queue = skipped
         self._sync_active()
         return admitted
@@ -217,6 +245,10 @@ class TPFIFOGameEngine(TPFIFODriver):
         game = cfg.game_obj
         board = (game.init_board() if req.board is None
                  else jnp.asarray(req.board, jnp.int8))
+        metrics = None
+        if cfg.metrics:
+            from repro.obsv.search_metrics import init_search_metrics
+            metrics = init_search_metrics()
         return _SearchState(
             cfg=cfg, board=board, key=jax.random.key(req.seed),
             cp=jnp.asarray(cfg.cp, jnp.float32),
@@ -224,7 +256,8 @@ class TPFIFOGameEngine(TPFIFODriver):
                                          cfg.n_workers, cfg.scheduler),
             tree=init_tree(cfg.tree_cap, game.n_actions, req.to_move),
             deadline=(None if req.deadline_s is None
-                      else t.t_submit + req.deadline_s))
+                      else t.t_submit + req.deadline_s),
+            metrics=metrics)
 
     # -- tick -------------------------------------------------------------
     def step(self) -> int:
@@ -249,25 +282,57 @@ class TPFIFOGameEngine(TPFIFODriver):
         """One quantum: up to ``m`` schedule rounds of this request's
         search — the exact ``run_schedule_round`` calls (same key, same
         Round sequence) the uninterrupted driver would make, which is the
-        whole bit-identity argument."""
+        whole bit-identity argument. With a tracer the quantum is recorded
+        as an ``X`` span annotated with the rounds/iterations it actually
+        covered (blocking on the device at span end so the duration is
+        honest — a profiling perturbation, documented in DESIGN.md §15)."""
         st = self._states[t.req.rid]
-        for _ in range(m):
-            if st.round_idx >= len(st.schedule):
-                break
-            if st.deadline is not None and self._now() >= st.deadline:
-                st.expired = True
-                break
-            rnd = st.schedule[st.round_idx]
-            st.tree = run_schedule_round(st.tree, st.board, st.cfg, st.key,
-                                         rnd, st.cp)
-            st.round_idx += 1
-            st.playouts += int(rnd.active.sum()) * rnd.m
-            t.req.out.append(st.round_idx)   # committed progress
+        span_args = {"rid": t.req.rid, "game": st.cfg.game, "rounds": 0,
+                     "iterations": 0, "lane_iterations": 0,
+                     "workers": st.cfg.n_workers} if self.tracer else None
+        span = (self.tracer.span("quantum", span_args) if self.tracer
+                else contextlib.nullcontext())
+        with span:
+            for _ in range(m):
+                if st.round_idx >= len(st.schedule):
+                    break
+                if st.deadline is not None and self._now() >= st.deadline:
+                    st.expired = True
+                    if self.tracer:
+                        self.tracer.instant("deadline_expiry", {
+                            "rid": t.req.rid, "game": st.cfg.game,
+                            "rounds_done": st.round_idx,
+                            "rounds_total": len(st.schedule)})
+                    if self.registry:
+                        self.registry.counter(
+                            "serve_deadline_expiries_total",
+                            "searches retired on deadline").inc()
+                    break
+                rnd = st.schedule[st.round_idx]
+                if st.cfg.metrics:
+                    st.tree, st.metrics = run_schedule_round(
+                        st.tree, st.board, st.cfg, st.key, rnd, st.cp,
+                        st.metrics)
+                else:
+                    st.tree = run_schedule_round(st.tree, st.board, st.cfg,
+                                                 st.key, rnd, st.cp)
+                st.round_idx += 1
+                st.playouts += int(rnd.active.sum()) * rnd.m
+                t.req.out.append(st.round_idx)   # committed progress
+                if span_args is not None:
+                    span_args["rounds"] += 1
+                    span_args["iterations"] += int(rnd.m)
+                    span_args["lane_iterations"] += (
+                        int(rnd.active.sum()) * rnd.m)
+            if self.tracer and span_args["rounds"] > 0:
+                jax.block_until_ready(st.tree.visits)
 
     # -- slot lifecycle ---------------------------------------------------
     def _retire(self, ck: GSCPMConfig, s: int, t: Ticket) -> None:
         st = self._states.pop(t.req.rid)
-        jax.block_until_ready(st.tree.visits)
+        with (self.tracer.span("device_sync", {"rid": t.req.rid})
+              if self.tracer else contextlib.nullcontext()):
+            jax.block_until_ready(st.tree.visits)
         res = root_summary(st.tree, st.cfg.game_obj.n_actions)
         t.t_done = self._now()
         res.update(
@@ -277,11 +342,27 @@ class TPFIFOGameEngine(TPFIFODriver):
             preemptions=t.preemptions,
             queue_wait_s=t.t_admit - t.t_submit,
             latency_s=t.t_done - t.t_submit)
+        if st.cfg.metrics:
+            from repro.obsv.search_metrics import summarize_metrics
+            res["metrics"] = summarize_metrics(st.metrics)
         self.pools[ck][s] = None
         t.req.result = res
         t.req.done = True
         self.finished.append(t.req)
         self.finished_tickets.append(t)
+        if self.tracer:
+            self.tracer.instant("retire", {
+                "rid": t.req.rid, "game": st.cfg.game, "slot": s,
+                "quanta": t.quanta, "preemptions": t.preemptions,
+                "rounds": st.round_idx, "playouts": st.playouts,
+                "deadline_expired": st.expired,
+                "latency_s": round(t.t_done - t.t_submit, 6)})
+        if self.registry:
+            self.registry.counter("serve_requests_finished_total",
+                                  "requests retired complete").inc()
+            self.registry.counter("serve_playouts_total",
+                                  "playouts committed across all "
+                                  "retired searches").inc(st.playouts)
 
     def _preempt(self, ck: GSCPMConfig, s: int, t: Ticket) -> None:
         """Tail-requeue (round-robin sharing within the class). The tree
@@ -289,6 +370,16 @@ class TPFIFOGameEngine(TPFIFODriver):
         self.pools[ck][s] = None
         t.preemptions += 1
         self.queue.append(t)
+        if self.tracer:
+            st = self._states[t.req.rid]
+            self.tracer.instant("preempt", {
+                "rid": t.req.rid, "game": ck.game, "slot": s,
+                "quanta_run": t.quanta - t.quanta_at_admit,
+                "rounds_done": st.round_idx,
+                "progress": len(t.req.out) - t.seg_base})
+        if self.registry:
+            self.registry.counter("serve_preemptions_total",
+                                  "over-budget requests requeued").inc()
 
 
 # the protocol-level name; TPFIFO is the (only) scheduling flavor today

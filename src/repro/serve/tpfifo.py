@@ -102,23 +102,30 @@ class QueueStats:
 
     @classmethod
     def from_tickets(cls, tickets: list[Ticket]) -> "QueueStats":
+        # progress accounting covers ALL tickets — a run that preempted
+        # requests but finished none still reports its preemptions, quanta,
+        # and committed tokens (they live in req.out across requeues);
+        # latency percentiles are defined only for finished requests.
+        n_preempt = sum(t.preemptions for t in tickets)
+        quanta = sum(t.quanta for t in tickets)
+        tokens = sum(len(t.req.out) for t in tickets)
         done = [t for t in tickets if t.t_done is not None]
         if not done:
-            return cls(0, 0, 0, 0, 0.0, 0.0, *([0.0] * 6))
+            return cls(0, n_preempt, tokens, quanta, 0.0, 0.0, *([0.0] * 6))
         waits = np.asarray([t.t_admit - t.t_submit for t in done])
         service = np.asarray([t.t_done - t.t_admit for t in done])
         latency = np.asarray([t.t_done - t.t_submit for t in done])
         t0 = min(t.t_submit for t in done)
         wall = max(t.t_done for t in done) - t0
-        tokens = sum(len(t.req.out) for t in done)
+        tokens_done = sum(len(t.req.out) for t in done)
         p = np.percentile
         return cls(
             n_finished=len(done),
-            n_preemptions=sum(t.preemptions for t in done),
+            n_preemptions=n_preempt,
             tokens=tokens,
-            quanta=sum(t.quanta for t in done),
+            quanta=quanta,
             wall_s=wall,
-            throughput_tok_s=tokens / max(wall, 1e-9),
+            throughput_tok_s=tokens_done / max(wall, 1e-9),
             queue_wait_p50=float(p(waits, 50)),
             queue_wait_p95=float(p(waits, 95)),
             service_p50=float(p(service, 50)),
@@ -140,10 +147,17 @@ class TPFIFODriver:
     engines pass ``grain=None`` (no quantum plans, no preemption); grained
     engines get per-request plans from ``scheduler.quantum_plan`` and call
     ``_tick_m()`` for each dispatch's micro-step count.
+
+    Observability (DESIGN.md §15) is attach-to-enable: ``tracer`` (a
+    ``repro.obsv.TraceRecorder``) records admission/retire/preempt instants,
+    per-tick spans, queue-depth counter tracks, and jit-compile events;
+    ``registry`` (a ``repro.obsv.MetricsRegistry``) keeps running
+    counters/gauges. Both default to ``None`` and cost nothing detached.
     """
 
     def __init__(self, n_slots: int, grain: int | None = None,
-                 policy: str = "fifo", preempt_quanta: int | None = None):
+                 policy: str = "fifo", preempt_quanta: int | None = None,
+                 tracer=None, registry=None):
         if grain is not None and policy not in (
                 "fifo", "rebalance", "one_per_core", "sequential"):
             raise ValueError(f"unknown TPFIFO policy: {policy!r}")
@@ -153,6 +167,8 @@ class TPFIFODriver:
         self.grain = grain
         self.policy = policy
         self.preempt_quanta = preempt_quanta
+        self.tracer = tracer
+        self.registry = registry
         self.queue: collections.deque[Ticket] = collections.deque()
         self.active: list[Ticket | None] = [None] * n_slots
         self.finished: list[Any] = []            # Request objects (public)
@@ -194,6 +210,15 @@ class TPFIFODriver:
                 self.admission_order.append(t.req.rid)
                 self._load_slot(s, t)
                 admitted.append(s)
+                if self.tracer:
+                    self.tracer.instant("admission", {
+                        "rid": t.req.rid, "slot": s,
+                        "resumed": t.preemptions > 0,
+                        "wait_s": round(t.t_admit - t.t_submit, 6)})
+                if self.registry:
+                    self.registry.counter(
+                        "serve_admissions_total",
+                        "requests admitted into a device slot").inc()
         return admitted
 
     def _retire_slot(self, s: int):
@@ -203,6 +228,17 @@ class TPFIFODriver:
         t.req.done = True
         self.finished.append(t.req)
         self.finished_tickets.append(t)
+        if self.tracer:
+            self.tracer.instant("retire", {
+                "rid": t.req.rid, "slot": s, "quanta": t.quanta,
+                "preemptions": t.preemptions, "tokens": len(t.req.out),
+                "latency_s": round(t.t_done - t.t_submit, 6)})
+        if self.registry:
+            self.registry.counter("serve_requests_finished_total",
+                                  "requests retired complete").inc()
+            self.registry.counter("serve_tokens_total",
+                                  "committed progress units "
+                                  "(tokens / moves)").inc(len(t.req.out))
 
     def _preempt_slot(self, s: int):
         """Requeue an over-budget request at the tail (round-robin sharing);
@@ -212,6 +248,14 @@ class TPFIFODriver:
         self.active[s] = None
         t.preemptions += 1
         self.queue.append(t)
+        if self.tracer:
+            self.tracer.instant("preempt", {
+                "rid": t.req.rid, "slot": s,
+                "quanta_run": t.quanta - t.quanta_at_admit,
+                "progress": len(t.req.out) - t.seg_base})
+        if self.registry:
+            self.registry.counter("serve_preemptions_total",
+                                  "over-budget requests requeued").inc()
 
     def _waiting_for(self, t: Ticket) -> bool:
         """Would preempting ``t`` let queued work run?
@@ -279,6 +323,28 @@ class TPFIFODriver:
         raise NotImplementedError
 
     # -- run loops --------------------------------------------------------
+    def _tick(self):
+        """One observed engine tick: step(), wrapped in a trace span when a
+        tracer is attached, plus queue/slot gauge updates."""
+        if self.tracer:
+            with self.tracer.span("tick", {"tick": self._ticks}):
+                self.step()
+            self.tracer.counter("queue", {
+                "depth": len(self.queue),
+                "active": sum(t is not None for t in self.active)})
+            self.tracer.poll_compiles()
+        else:
+            self.step()
+        if self.registry:
+            self.registry.counter("serve_ticks_total",
+                                  "engine ticks dispatched").inc()
+            self.registry.gauge("serve_queue_depth",
+                                "requests waiting").set(len(self.queue))
+            self.registry.gauge("serve_active_slots",
+                                "occupied device slots").set(
+                sum(t is not None for t in self.active))
+        self._ticks += 1
+
     def run(self, max_ticks: int = 10_000) -> list:
         """Drain loop: tick until the queue and all slots are empty.
 
@@ -287,8 +353,7 @@ class TPFIFODriver:
         """
         ticks = 0
         while self.has_work() and ticks < max_ticks:
-            self.step()
-            self._ticks += 1
+            self._tick()
             ticks += 1
         return self.finished
 
@@ -311,15 +376,19 @@ class TPFIFODriver:
                 at, req = pending.popleft()
                 self.submit(req, at=at)
             if self.has_work():
-                self.step()
-                self._ticks += 1
+                self._tick()
                 ticks += 1
             elif pending:
                 time.sleep(min(pending[0][0] - now, 1e-3))
         return self.finished
 
     def stats(self) -> QueueStats:
-        return QueueStats.from_tickets(self.finished_tickets)
+        """Telemetry over every ticket the driver has seen: finished,
+        still-active, and queued — so a mid-run (or never-finishing) serve
+        still reports its preemptions, quanta, and committed progress."""
+        live = [t for t in self.active if t is not None]
+        return QueueStats.from_tickets(
+            self.finished_tickets + live + list(self.queue))
 
 
 # ---------------------------------------------------------- jitted quantum ----
@@ -464,9 +533,12 @@ class TPFIFOEngine(TPFIFODriver):
     def __init__(self, params, cfg: ModelConfig, n_slots: int, max_len: int,
                  grain: int = 8, policy: str = "fifo",
                  preempt_quanta: int | None = None, temperature: float = 0.0,
-                 eos_id: int = 2, seed: int = 0):
+                 eos_id: int = 2, seed: int = 0, tracer=None, registry=None):
         super().__init__(n_slots, grain=grain, policy=policy,
-                         preempt_quanta=preempt_quanta)
+                         preempt_quanta=preempt_quanta, tracer=tracer,
+                         registry=registry)
+        if tracer is not None:
+            tracer.watch_compiles("run_quantum", run_quantum)
         self.params = params
         self.cfg = cfg
         self.max_len = max_len
@@ -573,9 +645,10 @@ class TPFIFOMCTSEngine(TPFIFODriver):
     def __init__(self, params, cfg: ModelConfig, dcfg, n_slots: int,
                  max_prompt_len: int, grain: int = 4, policy: str = "fifo",
                  preempt_quanta: int | None = None, eos_id: int = 2,
-                 seed: int = 0):
+                 seed: int = 0, tracer=None, registry=None):
         super().__init__(n_slots, grain=grain, policy=policy,
-                         preempt_quanta=preempt_quanta)
+                         preempt_quanta=preempt_quanta, tracer=tracer,
+                         registry=registry)
         self.params = params
         self.cfg = cfg
         self.dcfg = dcfg
