@@ -30,8 +30,8 @@ def main():
 
     from benchmarks import (ablate_vloss, fig5_cilkview, fig7_speedup,
                             fig9_mapping, kernels_micro, roofline_table,
-                            root_parallel, serve_games, table2_sequential,
-                            tpfifo)
+                            root_parallel, selfplay, serve_games,
+                            table2_sequential, tpfifo)
     from benchmarks.common import save_result
 
     n_po = 8192 if args.full else 1024
@@ -57,6 +57,9 @@ def main():
         "tpfifo": lambda: tpfifo.run(n_requests=48 if args.full else 24),
         "serve_games": lambda: serve_games.run(
             n_requests=32 if args.full else 16),
+        "selfplay": lambda: selfplay.run(
+            n_playouts=4096 if args.full else 1024,
+            max_moves=20 if args.full else 12),
     }
     if args.only:
         keep = {k.strip() for k in args.only.split(",")}
@@ -145,6 +148,10 @@ def write_mcts_trajectory(results: dict) -> str | None:
         # mixed hex+gomoku Poisson serving: move-latency percentiles,
         # playouts/s, and the zero-recompile ledger (see serve_games.py)
         payload["serving"] = results["serve_games"]["serving"]
+    if "selfplay" in results:
+        # cross-move tree reuse: warm vs cold move latency and the mean
+        # visits-retained fraction over a self-play game (see selfplay.py)
+        payload["selfplay"] = results["selfplay"]["selfplay"]
     km = results.get("kernels_micro")
     if km and "hex_winner" in km:
         # fused playout-evaluation throughput per (board, W) case + the
@@ -213,6 +220,14 @@ def _summ(name: str, res: dict) -> dict:
                 "p50_vs_one_per_core": round(s["p50_vs_one_per_core"], 2),
                 "p95_vs_one_per_core": round(s["p95_vs_one_per_core"], 2),
                 "preemptions": s["preemptions"],
+                "recompiles": s["recompiles"]}
+    if name == "selfplay":
+        s = res["selfplay"]
+        return {"warm_p50_ms": round(s["warm_move_p50_s"] * 1e3),
+                "cold_p50_ms": round(s["cold_move_p50_s"] * 1e3),
+                "p50_speedup": round(s["p50_speedup_warm_vs_cold"], 2),
+                "mean_retained_fraction": round(
+                    s["mean_retained_fraction"], 3),
                 "recompiles": s["recompiles"]}
     if name == "roofline_table":
         return {"n_ok": res["n_ok"], "n_cells": res["n_cells"]}

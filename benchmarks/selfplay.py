@@ -1,0 +1,196 @@
+"""Cross-move tree reuse: warm vs cold move latency over a self-play game.
+
+The serving loop this measures is DESIGN.md §16's: a ``GameSession`` plays
+a whole game through the TPFIFO engine, re-rooting its device-resident
+tree after every move so each search starts from the retained subtree and
+only runs the REMAINDER of its evidence budget (``serve.games.warm_budget``
+— ``n_playouts`` means total root evidence, warm or cold). At every
+position along the trajectory a paired COLD request (same position, same
+budget, fresh tree, stateless) is served through the same engine, so the
+two arms see identical scheduler overhead and an identical position
+sequence; the trajectory itself always advances with the warm arm's move.
+
+Reported per game: warm vs cold p50/p95 move latency, mean visits-retained
+fraction, and the compile ledger — the whole game (re-roots included) must
+add ZERO ``run_chunk`` entries beyond the per-class warm-up (asserted).
+Feeds BENCH_mcts.json under the ``selfplay`` key.
+
+    PYTHONPATH=src python benchmarks/selfplay.py [--smoke|--full]
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+if __package__ in (None, ""):   # `python benchmarks/selfplay.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from repro.core.gscpm import run_chunk
+from repro.serve.games import GameRequest, GameSession, TPFIFOGameEngine
+
+GAMES = ("hex", "gomoku")
+
+
+def _serve_one(eng, req) -> float:
+    """Submit one request, run it to completion, return wall seconds."""
+    t0 = time.perf_counter()
+    eng.submit(req)
+    eng.run()
+    return time.perf_counter() - t0
+
+
+def play_paired_game(eng, game: str, board_size: int, *, n_playouts: int,
+                     n_tasks: int, max_moves: int, seed: int,
+                     cp: float = 0.25) -> dict:
+    """One self-play trajectory with a paired cold search at every position.
+
+    The session (one tenant playing both sides — the strongest-retention
+    arm: exactly one re-root per move) produces the warm measurements and
+    the moves; each cold measurement is a stateless request for the same
+    position and the same total budget, served by the same engine.
+
+    ``cp`` defaults LOW (0.25): self-play move selection exploits, and an
+    exploration-heavy root (cp=1.0 spreads 1024 visits nearly uniformly
+    over 49 children on 7x7) leaves the played child only ~1/49 of the
+    evidence — retention, and therefore the warm arm's whole advantage,
+    is a property of how concentrated the root visits are. Both arms use
+    the same cp, so the pairing stays fair.
+    """
+    sess = GameSession(eng, game, board_size, base_seed=seed,
+                       name=f"bench-{game}")
+    warm_s, cold_s, retained = [], [], []
+    for mvno in range(max_moves):
+        # cold arm first (its tree is dropped at retirement; ordering
+        # cannot leak state into the warm arm)
+        cold = GameRequest(
+            rid=f"cold-{game}#{mvno}", game=game, board_size=board_size,
+            to_move=sess.to_move, n_playouts=n_playouts, n_tasks=n_tasks,
+            cp=cp, seed=seed + mvno, board=np.asarray(sess.board))
+        cold_s.append(_serve_one(eng, cold))
+
+        req = sess.make_request(n_playouts=n_playouts, n_tasks=n_tasks,
+                                cp=cp)
+        warm_s.append(_serve_one(eng, req))
+        res = req.result
+        retained.append(res["reused_visits"] / n_playouts)
+
+        mv = res["best_move"]
+        if mv < 0:
+            break
+        sess.play(mv)
+        if sess.winner() >= 0:
+            break
+    return {
+        "game": game,
+        "n_moves": len(warm_s),
+        "warm_latency_s": warm_s,
+        "cold_latency_s": cold_s,
+        "retained_fractions": retained,
+        "warm_p50_s": float(np.percentile(warm_s, 50)),
+        "warm_p95_s": float(np.percentile(warm_s, 95)),
+        "cold_p50_s": float(np.percentile(cold_s, 50)),
+        "cold_p95_s": float(np.percentile(cold_s, 95)),
+        "mean_retained_fraction": float(np.mean(retained)),
+        "p50_speedup": float(np.percentile(cold_s, 50)
+                             / max(np.percentile(warm_s, 50), 1e-9)),
+    }
+
+
+def run(n_playouts: int = 1024, n_tasks: int = 128, board_size: int = 7,
+        max_moves: int = 12, n_workers: int = 8, grain: int = 4,
+        tree_cap: int | None = None, seed: int = 0,
+        smoke: bool = False) -> dict:
+    # n_tasks defaults HIGH (m = 1024/128 = 8): warm time savings are
+    # quantized to whole schedule rounds (masked lanes still compute), so
+    # fine task grain is what converts retained visits into latency —
+    # at m=32 a warm search must retain n_workers*32 visits to drop one
+    # round; at m=8 the savings track the retained fraction near-linearly
+    if smoke:
+        n_playouts, n_tasks, board_size, max_moves = 64, 8, 5, 3
+    cap = tree_cap or max(2048, 4 * n_playouts)
+
+    eng = TPFIFOGameEngine(n_slots=2, grain=grain, n_workers=n_workers,
+                           tree_cap=cap)
+
+    # compile off the clock: one tiny search per game class warms the one
+    # quantum program each class ever gets; the whole benchmark (warm and
+    # cold arms, re-roots, every budget size) must then add nothing
+    for g in GAMES:
+        _serve_one(eng, GameRequest(rid=f"warm-{g}", game=g,
+                                    board_size=board_size, n_playouts=8,
+                                    n_tasks=2, seed=0))
+    cache_before = run_chunk._cache_size()
+
+    games = {}
+    for g in GAMES:
+        games[g] = play_paired_game(eng, g, board_size,
+                                    n_playouts=n_playouts, n_tasks=n_tasks,
+                                    max_moves=max_moves, seed=seed)
+    recompiles = run_chunk._cache_size() - cache_before
+    assert recompiles == 0, \
+        f"self-play (with re-rooting) grew the jit cache by {recompiles}"
+
+    best = max(games.values(), key=lambda s: s["p50_speedup"])
+    return {
+        "config": {"n_playouts": n_playouts, "n_tasks": n_tasks,
+                   "board_size": board_size, "max_moves": max_moves,
+                   "n_workers": n_workers, "grain": grain, "tree_cap": cap,
+                   "cp": 0.25, "seed": seed, "smoke": smoke},
+        "games": games,
+        "selfplay": {
+            "board": f"{board_size}x{board_size}",
+            "n_playouts": n_playouts,
+            "warm_move_p50_s": best["warm_p50_s"],
+            "warm_move_p95_s": best["warm_p95_s"],
+            "cold_move_p50_s": best["cold_p50_s"],
+            "cold_move_p95_s": best["cold_p95_s"],
+            "mean_retained_fraction": float(np.mean(
+                [s["mean_retained_fraction"] for s in games.values()])),
+            "p50_speedup_warm_vs_cold": best["p50_speedup"],
+            "best_game": best["game"],
+            "recompiles": recompiles,
+            "per_game": {g: {
+                "warm_p50_s": s["warm_p50_s"],
+                "cold_p50_s": s["cold_p50_s"],
+                "p50_speedup": s["p50_speedup"],
+                "mean_retained_fraction": s["mean_retained_fraction"],
+            } for g, s in games.items()},
+        },
+    }
+
+
+def main():
+    import argparse
+
+    from benchmarks.common import save_result
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny game (CI rot-guard, <1 min)")
+    p.add_argument("--full", action="store_true")
+    args = p.parse_args()
+
+    out = run(smoke=args.smoke,
+              n_playouts=4096 if args.full else 1024,
+              max_moves=20 if args.full else 12)
+    for g, s in out["games"].items():
+        print(f"{g:>8}: warm p50/p95 {s['warm_p50_s']*1e3:6.0f}/"
+              f"{s['warm_p95_s']*1e3:6.0f} ms   cold p50/p95 "
+              f"{s['cold_p50_s']*1e3:6.0f}/{s['cold_p95_s']*1e3:6.0f} ms   "
+              f"retained {s['mean_retained_fraction']:.2f}   "
+              f"p50 speedup {s['p50_speedup']:.2f}x")
+    s = out["selfplay"]
+    print(f"best ({s['best_game']}): warm beats cold "
+          f"{s['p50_speedup_warm_vs_cold']:.2f}x at p50; "
+          f"recompiles during self-play: {s['recompiles']}")
+    path = save_result("selfplay", out)
+    print("->", path)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Self-play sessions: two whole games with cross-move tree reuse.
+
+Two ``GameSession`` tenants — one playing 5x5 Hex, one 5x5 Gomoku — share
+a single TPFIFO engine and play their games to completion (DESIGN.md §16).
+Each session holds its device-resident search tree between moves: after
+every ``play(move)`` the tree is re-rooted onto the played child
+(``core.tree.reroot_tree``), so the next search starts from the retained
+subtree and only runs the remainder of its evidence budget. Per-move lines
+print the retained-visit fraction — the statistic the warm-vs-cold
+benchmark (benchmarks/selfplay.py) aggregates.
+
+    PYTHONPATH=src python examples/selfplay.py
+"""
+
+from repro.serve.games import GameSession, TPFIFOGameEngine
+
+SIZE = 5
+PLAYOUTS = 256
+OUTCOME = {0: "draw", 1: "player 1 wins", 2: "player 2 wins"}
+
+
+def play_out(eng, sess: GameSession, max_moves: int = 25) -> None:
+    print(f"[{sess.game} {SIZE}x{SIZE}] session {sess.name}")
+    for _ in range(max_moves):
+        req = sess.make_request(n_playouts=PLAYOUTS, n_tasks=16)
+        eng.submit(req)
+        eng.run()
+        res = req.result
+        mv = res["best_move"]
+        if mv < 0:
+            break
+        sess.play(mv)
+        print(f"  mv{len(sess.moves):>3} p{3 - sess.to_move} -> {mv:>3}  "
+              f"{res['playouts']:>4} fresh playouts, "
+              f"reused {res['reused_visits']:>4} visits; after re-root "
+              f"retained {sess.retained_fraction:.2f} of the tree's "
+              f"evidence")
+        if sess.over():
+            break
+    print(f"  {OUTCOME.get(sess.winner(), 'unfinished')} "
+          f"after {len(sess.moves)} moves\n")
+
+
+def main():
+    # one engine, two game classes: each class compiles ONE quantum
+    # program and owns its own slot pool; both sessions ride it
+    eng = TPFIFOGameEngine(n_slots=2, grain=4, n_workers=8, tree_cap=2048)
+    play_out(eng, GameSession(eng, "hex", SIZE, base_seed=0))
+    play_out(eng, GameSession(eng, "gomoku", SIZE, base_seed=1))
+
+
+if __name__ == "__main__":
+    main()

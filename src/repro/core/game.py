@@ -28,6 +28,10 @@ vectorized primitives the fused pipeline consumes:
                      bit-identical to one lane of ``playout_batch``)
 ``winner_batch``     terminal boards -> ``(W,)`` int8 outcomes
 ``replay_moves``     masked-scatter board reconstruction from a move list
+``winner_probe``     ONE possibly-PARTIAL board -> int8 status: -1 ongoing,
+                     0 draw, 1|2 the winner — the game-over test session
+                     drivers poll between moves (unlike ``winner_batch``,
+                     which assumes terminal boards)
 ===================  ========================================================
 
 Conventions shared by every game (the search machinery assumes them):

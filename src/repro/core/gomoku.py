@@ -283,5 +283,18 @@ class GomokuGame(NamedTuple):
         return game_mod.replay_moves(moves, n_moves, first_player,
                                      self.n_cells)
 
+    def winner_probe(self, board) -> jnp.ndarray:
+        # PARTIAL boards welcome (unlike winner_batch's terminal-only
+        # contract): a five decides regardless of remaining space, a full
+        # board without one is the draw, anything else is ongoing
+        fb = has_five_batch(board[None], BLACK, self._spec)[0]
+        fw = has_five_batch(board[None], WHITE, self._spec)[0]
+        full = ~(board == EMPTY).any()
+        return jnp.where(
+            fb, jnp.int8(1),
+            jnp.where(fw, jnp.int8(2),
+                      jnp.where(full, jnp.int8(0),
+                                jnp.int8(-1))))
+
 
 game_mod.register_game("gomoku", GomokuGame)

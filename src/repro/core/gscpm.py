@@ -502,9 +502,44 @@ def run_schedule_round(tree: Tree, board: jnp.ndarray, cfg: GSCPMConfig,
     return run_chunk(*args)
 
 
+def warm_tree_check(tree: Tree, to_move: int, cfg: GSCPMConfig) -> None:
+    """Eagerly validate a warm-start tree against the config (DESIGN.md §16).
+
+    A warm tree with the wrong capacity or children width would not crash —
+    it would silently compile a SECOND program for the game class, defeating
+    the zero-recompile serving discipline — so shape mismatches fail loudly
+    here. The side-to-move must also match: a re-rooted tree already knows
+    whose turn it is, and searching it for the other player would corrupt
+    the retained statistics' meaning.
+    """
+    if tree.cap != cfg.tree_cap:
+        raise ValueError(
+            f"warm tree cap {tree.cap} != cfg.tree_cap {cfg.tree_cap}; "
+            "re-root with new_cap=cfg.tree_cap to match the serving class")
+    n_actions = cfg.game_obj.n_actions
+    if tree.max_children != n_actions:
+        raise ValueError(
+            f"warm tree max_children {tree.max_children} != game n_actions "
+            f"{n_actions} — tree built for a different game class")
+    tm = int(tree.to_move[..., 0].reshape(-1)[0])
+    if tm != to_move:
+        raise ValueError(
+            f"warm tree root to_move {tm} != requested to_move {to_move}")
+
+
 def gscpm_search(board: jnp.ndarray, to_move: int, cfg: GSCPMConfig,
-                 key: jax.Array, *, tracer=None) -> tuple[Tree, dict[str, Any]]:
+                 key: jax.Array, *, tree: Tree | None = None,
+                 tracer=None) -> tuple[Tree, dict[str, Any]]:
     """Full GSCPM search (paper Fig 4): schedule tasks, return tree + stats.
+
+    ``tree`` warm-starts the search from an existing tree — typically the
+    output of ``reroot_tree`` after a move was played (DESIGN.md §16).
+    The schedule is exactly ``cfg``'s either way, so a warm search from
+    tree T is bit-identical to a cold search whose ``init_tree`` was
+    hand-replaced by T: warm start changes the starting evidence, never
+    the program. The caller keeps ownership semantics in mind: the passed
+    tree's buffers are DONATED to the first chunk (``run_chunk``), so the
+    input object must not be reused afterwards.
 
     ``cfg.metrics`` adds a device-plane ``SearchMetrics`` summary under
     ``stats["metrics"]`` (one host readback at the end of the search).
@@ -514,11 +549,18 @@ def gscpm_search(board: jnp.ndarray, to_move: int, cfg: GSCPMConfig,
     on the device after every round to attribute device time to its round
     — a profiling mode, not the fastest way to run a search.
     """
-    tree = init_tree(cfg.tree_cap, cfg.game_obj.n_actions, to_move)
+    reused_nodes = 0
+    reused_visits = 0.0
+    if tree is None:
+        tree = init_tree(cfg.tree_cap, cfg.game_obj.n_actions, to_move)
+    else:
+        warm_tree_check(tree, to_move, cfg)
+        reused_nodes = int(tree.n_nodes) - 1   # cold trees also own the root
+        reused_visits = float(tree.visits[0])
     metrics = None
     if cfg.metrics:
         from repro.obsv.search_metrics import init_search_metrics
-        metrics = init_search_metrics()
+        metrics = init_search_metrics(tree_nodes_reused=reused_nodes)
     schedule = sched.make_schedule(
         cfg.n_playouts, cfg.n_tasks, cfg.n_workers, cfg.scheduler)
 
@@ -556,6 +598,9 @@ def gscpm_search(board: jnp.ndarray, to_move: int, cfg: GSCPMConfig,
         "root_value": float(root_value(tree)),
         "best_move": int(best_child(tree)),
     }
+    if reused_nodes or reused_visits:
+        stats["reused_nodes"] = reused_nodes
+        stats["reused_visits"] = reused_visits
     if cfg.metrics:
         from repro.obsv.search_metrics import summarize_metrics
         stats["metrics"] = summarize_metrics(metrics)

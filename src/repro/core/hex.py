@@ -491,5 +491,14 @@ class HexGame(NamedTuple):
     def replay_moves(self, moves, n_moves, first_player) -> jnp.ndarray:
         return replay_moves(moves, n_moves, first_player, self)
 
+    def winner_probe(self, board) -> jnp.ndarray:
+        # PARTIAL boards welcome: ``connected_batch`` only needs a chain to
+        # exist, not a full board (unlike ``winner``'s full-board
+        # contract). Hex never draws, so the outcomes are -1|1|2.
+        c1 = connected_batch(board[None], BLACK, self)[0]
+        c2 = connected_batch(board[None], WHITE, self)[0]
+        return jnp.where(c1, jnp.int8(1),
+                         jnp.where(c2, jnp.int8(2), jnp.int8(-1)))
+
 
 game_mod.register_game("hex", HexGame)

@@ -228,14 +228,20 @@ def sync_root_stats(forest: Tree, state: RootSyncState, n_moves: int
 # ------------------------------------------------------------------ driver ----
 def gscpm_search_batch(boards: jnp.ndarray, to_move, cfg: GSCPMConfig,
                        key: jax.Array, *, n_trees: int | None = None,
-                       merge_every: int = 0, tracer=None
-                       ) -> tuple[Tree, dict[str, Any]]:
+                       merge_every: int = 0, forest: Tree | None = None,
+                       tracer=None) -> tuple[Tree, dict[str, Any]]:
     """Root-parallel GSCPM over E trees in one jitted program per round.
 
     boards: (E, n_cells) — one root position per member (multi-request
     search), or (n_cells,) with ``n_trees=E`` — an E-member ensemble on one
     position. ``to_move`` is scalar or (E,). ``merge_every > 0`` enables
     periodic root synchronization (plus a final sync before move selection).
+
+    ``forest`` warm-starts all E members from an existing forest — typically
+    ``reroot_forest``'s output after a move (DESIGN.md §16). The member
+    count must match the boards batch; as with the single-tree warm start
+    the schedule stays exactly ``cfg``'s and the forest's buffers are
+    donated to the first chunk.
 
     Per-round work is ONE dispatch of ``run_chunk_forest`` — no per-tree
     Python loop; with multiple devices the ensemble axis is sharded.
@@ -245,13 +251,26 @@ def gscpm_search_batch(boards: jnp.ndarray, to_move, cfg: GSCPMConfig,
     """
     boards = jnp.asarray(boards)
     if boards.ndim == 1:
+        if n_trees is None and forest is not None:
+            n_trees = forest_size(forest)   # warm restart implies E
         boards = jnp.tile(boards[None, :], (n_trees or 1, 1))
     E = boards.shape[0]
     if n_trees is not None and n_trees != E:
         raise ValueError(f"n_trees={n_trees} != boards.shape[0]={E}")
     n_moves = cfg.game_obj.n_actions  # the Game seam's move-id space
 
-    forest = init_forest(E, cfg.tree_cap, n_moves, to_move)
+    reused_nodes = 0
+    if forest is None:
+        forest = init_forest(E, cfg.tree_cap, n_moves, to_move)
+    else:
+        if forest_size(forest) != E:
+            raise ValueError(
+                f"warm forest has {forest_size(forest)} members, "
+                f"boards batch has {E}")
+        from repro.core.gscpm import warm_tree_check
+        tm = int(np.asarray(to_move).reshape(-1)[0])
+        warm_tree_check(forest, tm, cfg)
+        reused_nodes = int(np.asarray(forest.n_nodes).sum()) - E
     member_keys = fold_task_keys(key, jnp.arange(E, dtype=jnp.int32))
     sharding = ensemble_sharding(E)
     if sharding is not None:
@@ -264,6 +283,10 @@ def gscpm_search_batch(boards: jnp.ndarray, to_move, cfg: GSCPMConfig,
     if cfg.metrics:
         from repro.obsv.search_metrics import init_search_metrics_forest
         metrics = init_search_metrics_forest(E)
+        if reused_nodes:
+            # per-member retention gauge (summed in the ensemble summary)
+            metrics = metrics._replace(
+                tree_nodes_reused=(forest.n_nodes - 1).astype(jnp.int32))
 
     cp = jnp.asarray(cfg.cp, jnp.float32)
     t0 = time.perf_counter()
@@ -311,6 +334,8 @@ def gscpm_search_batch(boards: jnp.ndarray, to_move, cfg: GSCPMConfig,
         "best_move_sum": int(summary["best_move_sum"]),
         "best_move_vote": int(summary["best_move_vote"]),
     }
+    if reused_nodes:
+        stats["reused_nodes"] = reused_nodes
     if cfg.metrics:
         from repro.obsv.search_metrics import summarize_metrics
         stats["metrics"] = summarize_metrics(metrics)

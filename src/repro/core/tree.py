@@ -18,6 +18,7 @@ helpers; the root-parallel search layer lives in ``repro.core.root_parallel``.
 
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -198,7 +199,8 @@ def root_move_stats(tree: Tree, n_moves: int) -> tuple[jnp.ndarray, jnp.ndarray]
     return visits, wins
 
 
-def root_summary(tree: Tree, n_moves: int) -> dict:
+def root_summary(tree: Tree, n_moves: int,
+                 reused_visits: int | None = None) -> dict:
     """Host-side snapshot of the root decision — "whatever stats the tree
     has now".
 
@@ -209,15 +211,237 @@ def root_summary(tree: Tree, n_moves: int) -> dict:
     ships it at budget exhaustion, and the serving-equivalence suite
     compares it bit-for-bit against an uninterrupted search's snapshot. A
     tree with no root children yet reports ``best_move == NO_NODE`` (-1).
+
+    Works unchanged on RE-ROOTED trees (``reroot_tree``), whose root
+    carries nonzero visits before the first fresh playout — the snapshot is
+    always "retained + new" evidence. Pass ``reused_visits`` (the root
+    visit count the search started from; warm sessions know it) to expose
+    how much of the evidence was inherited; it is reported only when
+    present so cold-search snapshots stay bit-comparable across versions.
     """
     visits, wins = root_move_stats(tree, n_moves)
-    return {
+    out = {
         "root_visits": np.asarray(visits),
         "root_wins": np.asarray(wins),
         "best_move": int(best_child(tree)),
         "root_value": float(root_value(tree)),
         "tree_nodes": int(tree.n_nodes),
     }
+    if reused_visits is not None:
+        out["reused_visits"] = int(reused_visits)
+    return out
+
+
+# -------------------------------------------------------------- re-rooting ----
+def _reroot_impl(tree: Tree, move: jnp.ndarray, new_cap: int) -> Tree:
+    """Traced body of ``reroot_tree`` (see its docstring for the contract).
+
+    Everything is masked scatter/gather over static shapes:
+
+    1. locate the root child that carries ``move`` (may not exist);
+    2. subtree membership by pointer doubling on the parent array — the
+       old root and the played child become self-loops, so every allocated
+       node's ancestor pointer converges to one of the two in
+       ``ceil(log2(cap))`` gather rounds;
+    3. per-node depth by the companion (ancestor, distance) doubling;
+    4. BFS renumbering = one two-key ``lax.sort`` by (depth, old id):
+       parents sort strictly before children, so the new ids satisfy the
+       ``parent[i] < i`` allocation-order invariant every host-side walk
+       (``node_depths``, ``check_invariants``) relies on;
+    5. one gather per field copies the retained rows into a fresh layout;
+       non-retained rows source the old PAD row, whose fields are exactly
+       the ``init_tree`` values — so the compacted tree is bit-identical
+       to a freshly grown one node-for-node.
+    """
+    cap = tree.cap
+    C = tree.max_children
+    n = tree.n_nodes
+    idx = jnp.arange(cap + 1, dtype=jnp.int32)
+    alloc = idx < n
+
+    # 1. the played child (old pad row when the move was never expanded)
+    slots = tree.children[0]
+    valid = jnp.arange(C, dtype=jnp.int32) < tree.n_children[0]
+    safe = jnp.where(valid, slots, cap)
+    hit = valid & (tree.move[safe] == move)
+    exists = hit.any()
+    child = jnp.where(exists, safe[jnp.argmax(hit)], cap)
+
+    # 2. membership: ancestor pointers converge to a self-loop at the old
+    # root (non-members) or at the played child (members)
+    rounds = max(1, int(cap + 1).bit_length())
+    anc = jnp.where(alloc, tree.parent, idx)   # unallocated/pad: self-loop
+    anc = jnp.where(idx == 0, 0, anc)
+    anc = jnp.where(idx == child, idx, anc)
+    # 3. distance-to-root rides the same doubling (root contributes 0)
+    par = jnp.where(alloc, tree.parent, idx)
+    par = jnp.where(idx == 0, 0, par)
+    dist = ((idx != 0) & alloc).astype(jnp.int32)
+
+    def _double(_, s):
+        anc, dist, par = s
+        return anc[anc], dist + dist[par], par[par]
+
+    # fori_loop, not a Python loop: unrolling ~14 gather rounds makes the
+    # XLA:CPU compile take minutes at tree_cap=16k
+    anc, dist, par = jax.lax.fori_loop(0, rounds, _double, (anc, dist, par))
+    member = alloc & (anc == child)
+    n_sub = member.sum().astype(jnp.int32)
+
+    # 4. BFS order: members sorted by (depth, old id); non-members sink
+    BIG = jnp.int32(2**30)
+    key_depth = jnp.where(member, dist, BIG)
+    _, order = jax.lax.sort((key_depth, idx), num_keys=2)
+    rank = jnp.arange(cap + 1, dtype=jnp.int32)
+    is_m = rank < n_sub
+    # old id -> new id; everything outside the subtree maps to the new PAD
+    new_of_old = jnp.full((cap + 1,), new_cap, jnp.int32).at[
+        jnp.where(is_m, order, cap)].set(
+        jnp.where(is_m, rank, new_cap))
+
+    # 5. gather rows into the fresh layout (new row k copies old row
+    # order[k]; rows past the subtree copy the old PAD row == init state)
+    kk = jnp.arange(new_cap + 1, dtype=jnp.int32)
+    take = kk < n_sub
+    src = jnp.where(take, order[jnp.minimum(kk, cap)], cap)
+
+    parent = jnp.where(take, new_of_old[jnp.clip(tree.parent[src], 0, cap)],
+                       NO_NODE).at[0].set(NO_NODE)
+    mv_arr = jnp.where(take, tree.move[src], NO_NODE).at[0].set(NO_NODE)
+    to_move = jnp.where(take, tree.to_move[src], 0).at[0].set(
+        3 - tree.to_move[0])
+    ch_old = tree.children[src]                          # (new_cap+1, C)
+    children = jnp.where((ch_old >= 0) & take[:, None],
+                         new_of_old[jnp.clip(ch_old, 0, cap)],
+                         NO_NODE).astype(jnp.int32)
+    return Tree(
+        parent=parent.astype(jnp.int32),
+        move=mv_arr.astype(jnp.int32),
+        to_move=to_move.astype(jnp.int32),
+        children=children,
+        n_children=jnp.where(take, tree.n_children[src], 0),
+        visits=jnp.where(take, tree.visits[src], 0.0),
+        wins=jnp.where(take, tree.wins[src], 0.0),
+        vloss=jnp.zeros((new_cap + 1,), jnp.float32),
+        n_nodes=jnp.maximum(n_sub, 1),
+    )
+
+
+_reroot_jit = jax.jit(_reroot_impl, static_argnames=("new_cap",))
+
+
+@functools.partial(jax.jit, static_argnames=("new_cap",))
+def _reroot_forest_jit(forest: Tree, moves: jnp.ndarray, new_cap: int) -> Tree:
+    return jax.vmap(lambda t, m: _reroot_impl(t, m, new_cap))(forest, moves)
+
+
+def _check_reroot_cap(cap: int, new_cap: int | None) -> int:
+    if new_cap is None:
+        return cap
+    if new_cap < cap:
+        # the retained subtree holds at most cap-1 nodes, so new_cap >= cap
+        # always fits; anything smaller cannot be proven to fit from traced
+        # shapes alone — refuse loudly instead of silently truncating the
+        # subtree (the stats-retention contract would be broken)
+        raise ValueError(
+            f"reroot capacity overflow risk: new_cap={new_cap} < "
+            f"source cap={cap}; a re-rooted subtree can hold up to cap-1 "
+            "nodes, so the fresh budget must be >= the source capacity "
+            "(shrinking a tree would silently drop retained statistics)")
+    return new_cap
+
+
+def reroot_tree(tree: Tree, move, new_cap: int | None = None) -> Tree:
+    """Re-root the tree at the root child carrying ``move`` (compaction).
+
+    The played child's whole subtree is BFS-renumbered into a fresh
+    fixed-capacity tree whose node 0 is that child: the warm start of the
+    NEXT move's search (DESIGN.md §16). Jittable — ``move`` is traced, the
+    pass is one compiled program per (cap, max_children, new_cap) shape.
+
+    Retention contract (asserted by ``check_reroot_retention`` and the
+    test suite): every retained node's ``visits``/``wins``/``to_move``/
+    ``move``, its child COUNT and child set, and its depth (shifted by
+    exactly -1) are bit-identical to the corresponding node of the source
+    tree. Rows outside the subtree are indistinguishable from a fresh
+    ``init_tree``'s, so a search continuing from the result behaves exactly
+    like one hand-seeded with the retained statistics. Virtual loss is
+    transient per-search state and is cleared.
+
+    Re-rooting onto a move the root never expanded (or an unvisited child)
+    yields a valid 1-node tree: root ``to_move`` flipped, zero statistics —
+    a cold start in warm clothing. ``new_cap`` (default: source capacity)
+    must be >= the source capacity; smaller budgets raise ``ValueError`` at
+    trace time rather than silently truncating the subtree.
+    """
+    new_cap = _check_reroot_cap(tree.cap, new_cap)
+    return _reroot_jit(tree, jnp.asarray(move, jnp.int32), new_cap=new_cap)
+
+
+def reroot_forest(forest: Tree, moves, new_cap: int | None = None) -> Tree:
+    """``reroot_tree`` for all E members in ONE vmapped call.
+
+    ``moves`` is a scalar (every member re-roots at the same played move —
+    the ensemble self-play case) or an (E,) vector (independent positions).
+    Each member keeps its own subtree; members that never expanded the move
+    come back as 1-node trees (the partial-merge twin of root parallelism's
+    "a member cannot host stats for a move it never discovered").
+    """
+    new_cap = _check_reroot_cap(forest.cap, new_cap)
+    E = forest_size(forest)
+    mv = jnp.broadcast_to(jnp.asarray(moves, jnp.int32), (E,))
+    return _reroot_forest_jit(forest, mv, new_cap=new_cap)
+
+
+def check_reroot_retention(src: Tree, dst: Tree, move: int) -> int:
+    """Host-side assertion of the re-root retention contract; returns the
+    number of retained nodes.
+
+    Walks the source subtree under the played child and checks every node
+    against its image in ``dst``: bit-identical ``visits``/``wins``,
+    matching ``to_move``/``move``/child count, child moves as a set, and
+    depth shifted by exactly one. Used by the tests and available to
+    drivers as a debugging probe (it is O(subtree), host-side, eager).
+    """
+    s = jax.tree.map(np.asarray, src)
+    d = jax.tree.map(np.asarray, dst)
+    kids0 = s.children[0][: int(s.n_children[0])]
+    hits = [int(k) for k in kids0 if int(s.move[k]) == int(move)]
+    if not hits:
+        assert int(d.n_nodes) == 1, "unexpanded move must yield 1-node tree"
+        assert d.visits[0] == 0.0 and d.wins[0] == 0.0
+        assert int(d.to_move[0]) == 3 - int(s.to_move[0])
+        return 0
+    root = hits[0]
+    sdep = node_depths(src)
+    ddep = node_depths(dst)
+    # BFS pairing: source subtree nodes in (depth, old id) order ARE the
+    # destination nodes 0..n_sub-1 in id order (the renumbering's contract)
+    members = []
+    stack = [root]
+    while stack:
+        u = stack.pop()
+        members.append(u)
+        stack.extend(int(c) for c in s.children[u][: int(s.n_children[u])])
+    members.sort(key=lambda u: (int(sdep[u]), u))
+    n_sub = len(members)
+    assert int(d.n_nodes) == n_sub, \
+        f"retained {int(d.n_nodes)} nodes, subtree has {n_sub}"
+    new_of_old = {u: k for k, u in enumerate(members)}
+    for u, k in new_of_old.items():
+        assert s.visits[u] == d.visits[k], f"visits differ at node {u}->{k}"
+        assert s.wins[u] == d.wins[k], f"wins differ at node {u}->{k}"
+        assert int(s.to_move[u]) == int(d.to_move[k])
+        if k != 0:
+            assert int(s.move[u]) == int(d.move[k])
+            assert new_of_old[int(s.parent[u])] == int(d.parent[k])
+        assert int(s.n_children[u]) == int(d.n_children[k])
+        su = {int(new_of_old[int(c)])
+              for c in s.children[u][: int(s.n_children[u])]}
+        du = set(d.children[k][: int(d.n_children[k])].tolist())
+        assert su == du, f"child set differs at node {u}->{k}"
+        assert int(sdep[u]) == int(ddep[k]) + 1, "depth must shift by one"
+    return n_sub
 
 
 def node_depths(tree: Tree) -> np.ndarray:
@@ -248,6 +472,15 @@ def check_invariants(tree: Tree, *, discrete_credits: bool = True) -> None:
     visit, so accumulated wins are half-integers. Token trees backed up
     with continuous values (``serve.mcts_decode.backup_values``) must pass
     ``discrete_credits=False``; the value-range check applies to both.
+
+    Every check here holds for RE-ROOTED trees (``reroot_tree``) too, by
+    design: the root of a warm tree may start with nonzero visits/wins
+    (retained evidence), which is fine because no invariant equates root
+    visits with the playout count — only the one-sided "children's visits
+    never exceed the parent's" bound is asserted, and the retention
+    contract carries both sides of that inequality bit-exactly. The
+    ``parent[i] < i`` allocation-order assumption (see ``node_depths``) is
+    preserved by the BFS renumbering's (depth, old id) sort key.
     """
     import numpy as np
 

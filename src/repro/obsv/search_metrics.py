@@ -53,12 +53,27 @@ class SearchMetrics(NamedTuple):
     playout_moves: jnp.ndarray          # Σ cells filled by playout evaluation
     playout_len_max: jnp.ndarray        # longest single playout
     tree_nodes_peak: jnp.ndarray        # max node occupancy observed
+    # nodes inherited from a re-rooted tree at search start (DESIGN.md §16)
+    # — seeded once by the warm-start entry points, carried through
+    # iterations unchanged, summed across merged streams/members so the
+    # retention rate shows up in traces next to the growth counters
+    tree_nodes_reused: jnp.ndarray
 
 
-def init_search_metrics() -> SearchMetrics:
-    """Fresh all-zero accumulator (scalar leaves)."""
+def init_search_metrics(tree_nodes_reused: int = 0) -> SearchMetrics:
+    """Fresh all-zero accumulator (scalar leaves).
+
+    ``tree_nodes_reused`` seeds the retention gauge for warm-started
+    searches (``gscpm_search(tree=...)``): the node count inherited from a
+    re-rooted tree, minus the trivial root (a cold tree also starts with 1
+    node, so a cold search reports 0).
+    """
     z = jnp.zeros((), jnp.int32)
-    return SearchMetrics(*([z] * len(SearchMetrics._fields)))
+    m = SearchMetrics(*([z] * len(SearchMetrics._fields)))
+    if tree_nodes_reused:
+        m = m._replace(
+            tree_nodes_reused=jnp.asarray(tree_nodes_reused, jnp.int32))
+    return m
 
 
 def init_search_metrics_forest(n_trees: int) -> SearchMetrics:
@@ -146,6 +161,7 @@ def accumulate_iteration(m: SearchMetrics, *, depths_grouped: jnp.ndarray,
         playout_len_max=jnp.maximum(m.playout_len_max,
                                     (playout_len * act_i).max()),
         tree_nodes_peak=jnp.maximum(m.tree_nodes_peak, n_nodes_after),
+        tree_nodes_reused=m.tree_nodes_reused,   # seeded at init, not per-iter
     )
 
 

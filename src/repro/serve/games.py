@@ -46,9 +46,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import game as game_mod
 from repro.core import scheduler as sched
-from repro.core.gscpm import GSCPMConfig, run_schedule_round
-from repro.core.tree import Tree, init_tree, root_summary
+from repro.core.gscpm import GSCPMConfig, run_schedule_round, warm_tree_check
+from repro.core.tree import Tree, init_tree, reroot_tree, root_summary
 from repro.serve.tpfifo import Ticket, TPFIFODriver
 
 
@@ -76,6 +77,11 @@ class GameRequest:
     seed: int = 0
     deadline_s: float | None = None
     board: Any = None
+    # the stateful tenant this request belongs to (``GameSession``): the
+    # session's device-resident tree warm-starts the search and the final
+    # tree is handed back at retirement. None = the classic stateless
+    # search-a-position request.
+    session: Any = None
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
     result: dict | None = None
@@ -102,6 +108,29 @@ class _SearchState:
     deadline: float | None = None   # absolute engine-clock instant
     expired: bool = False
     metrics: Any = None             # SearchMetrics accumulator (cfg.metrics)
+    session: Any = None             # owning GameSession (tree returns to it)
+    reused_nodes: int = 0           # warm-start inheritance (beyond the root)
+    reused_visits: float = 0.0      # root evidence the search started from
+
+
+def warm_budget(n_playouts: int, n_tasks: int, n_workers: int,
+                retained_visits: float) -> tuple[int, int]:
+    """Equal-evidence budget for a warm-started search (DESIGN.md §16).
+
+    ``n_playouts`` is the TOTAL root evidence the move decision should rest
+    on; a warm tree already holds ``retained_visits`` of it, so the search
+    only runs the remainder (floored at one full worker batch so a fully
+    warm position still refreshes its statistics). The task count shrinks
+    proportionally — the grain ``m = n_playouts // n_tasks`` is preserved,
+    so warm and cold searches run the SAME quantum program with the same
+    per-round shape, just fewer rounds. This is the honest accounting
+    behind "warm beats cold at equal playout budget": warm moves are
+    faster because they run fewer fresh playouts for the same evidence,
+    not because a playout got cheaper.
+    """
+    m = max(1, n_playouts // max(1, n_tasks))
+    eff = max(n_workers, n_playouts - int(retained_visits))
+    return eff, max(1, eff // m)
 
 
 # ----------------------------------------------------------------- engine ----
@@ -245,19 +274,43 @@ class TPFIFOGameEngine(TPFIFODriver):
         game = cfg.game_obj
         board = (game.init_board() if req.board is None
                  else jnp.asarray(req.board, jnp.int8))
+        # warm start: a session-backed request checks its tenant's
+        # device-resident tree out of the session (ownership moves to the
+        # engine until retirement) and shrinks the budget by the evidence
+        # the tree already holds — same class key, same compiled quantum,
+        # fewer rounds (``warm_budget``)
+        tree = None
+        reused_nodes = 0
+        reused_visits = 0.0
+        sess = req.session
+        if sess is not None:
+            tree = sess._checkout()
+        if tree is not None:
+            warm_tree_check(tree, req.to_move, cfg)
+            reused_nodes = int(tree.n_nodes) - 1
+            reused_visits = float(tree.visits[0])
+            eff_po, eff_tasks = warm_budget(
+                cfg.n_playouts, cfg.n_tasks, cfg.n_workers, reused_visits)
+            # compare=False fields: the replaced cfg hashes identically, so
+            # the pool key and the quantum program are untouched
+            cfg = dataclasses.replace(cfg, n_playouts=eff_po,
+                                      n_tasks=eff_tasks)
+        else:
+            tree = init_tree(cfg.tree_cap, game.n_actions, req.to_move)
         metrics = None
         if cfg.metrics:
             from repro.obsv.search_metrics import init_search_metrics
-            metrics = init_search_metrics()
+            metrics = init_search_metrics(tree_nodes_reused=reused_nodes)
         return _SearchState(
             cfg=cfg, board=board, key=jax.random.key(req.seed),
             cp=jnp.asarray(cfg.cp, jnp.float32),
             schedule=sched.make_schedule(cfg.n_playouts, cfg.n_tasks,
                                          cfg.n_workers, cfg.scheduler),
-            tree=init_tree(cfg.tree_cap, game.n_actions, req.to_move),
+            tree=tree,
             deadline=(None if req.deadline_s is None
                       else t.t_submit + req.deadline_s),
-            metrics=metrics)
+            metrics=metrics, session=sess,
+            reused_nodes=reused_nodes, reused_visits=reused_visits)
 
     # -- tick -------------------------------------------------------------
     def step(self) -> int:
@@ -333,7 +386,11 @@ class TPFIFOGameEngine(TPFIFODriver):
         with (self.tracer.span("device_sync", {"rid": t.req.rid})
               if self.tracer else contextlib.nullcontext()):
             jax.block_until_ready(st.tree.visits)
-        res = root_summary(st.tree, st.cfg.game_obj.n_actions)
+        res = root_summary(
+            st.tree, st.cfg.game_obj.n_actions,
+            reused_visits=(int(st.reused_visits)
+                           if st.session is not None or st.reused_nodes
+                           else None))
         t.t_done = self._now()
         res.update(
             game=st.cfg.game, board_size=st.cfg.board_size,
@@ -342,12 +399,19 @@ class TPFIFOGameEngine(TPFIFODriver):
             preemptions=t.preemptions,
             queue_wait_s=t.t_admit - t.t_submit,
             latency_s=t.t_done - t.t_submit)
+        if st.session is not None or st.reused_nodes:
+            res["reused_nodes"] = st.reused_nodes
         if st.cfg.metrics:
             from repro.obsv.search_metrics import summarize_metrics
             res["metrics"] = summarize_metrics(st.metrics)
         self.pools[ck][s] = None
         t.req.result = res
         t.req.done = True
+        if st.session is not None:
+            # hand the finished tree back to its tenant: the session's
+            # next ``play(move)`` re-roots it and the move after searches
+            # warm — this is the whole cross-move reuse loop
+            st.session._deliver(st.tree, res)
         self.finished.append(t.req)
         self.finished_tickets.append(t)
         if self.tracer:
@@ -380,6 +444,137 @@ class TPFIFOGameEngine(TPFIFODriver):
         if self.registry:
             self.registry.counter("serve_preemptions_total",
                                   "over-budget requests requeued").inc()
+
+
+# ---------------------------------------------------------------- session ----
+class GameSession:
+    """A stateful tenant: one game played move by move through the engine
+    (DESIGN.md §16).
+
+    The session owns the game's host-side position (board, side to move,
+    move list) and — between searches — the device-resident search tree.
+    Lifecycle per move:
+
+    1. ``make_request(...)`` builds a ``GameRequest`` bound to this session
+       (current position, current side, per-move seed); submit it to the
+       engine and drive ``step()``/``run()`` as usual.
+    2. At admission the engine checks the session's tree out
+       (``_checkout``) and warm-starts the search from it; the budget
+       shrinks by the retained root evidence (``warm_budget``), so
+       ``n_playouts`` always means total evidence at the root.
+    3. At retirement the searched tree is handed back (``_deliver``).
+    4. ``play(move)`` applies the move to the board and re-roots the tree
+       onto the played child (``core.tree.reroot_tree``) — the retained
+       subtree seeds the NEXT search warm.
+
+    One request may be in flight per session (the tree has one owner);
+    ``make_request`` enforces it. ``reuse_tree=False`` keeps the full
+    session bookkeeping but drops the tree at every ``play`` — the cold
+    ablation arm of the self-play benchmark. Sessions add no new compiled
+    programs: a session request is an ordinary request of its game class,
+    sharing the class's slot pool and quantum program.
+    """
+
+    def __init__(self, engine: TPFIFOGameEngine, game: str, board_size: int,
+                 *, reuse_tree: bool = True, base_seed: int = 0,
+                 name: str | None = None):
+        self.engine = engine
+        self.game = game
+        self.board_size = board_size
+        self.reuse = reuse_tree
+        self.base_seed = base_seed
+        self.name = name or f"{game}{board_size}-{base_seed}"
+        self.game_obj = game_mod.make_game(game, board_size)
+        self.board = self.game_obj.init_board()
+        self.to_move = 1
+        self.moves: list[int] = []
+        self.tree: Tree | None = None       # warm tree for the NEXT search
+        self.last_result: dict | None = None
+        # per-move retention telemetry (what examples/benchmarks print)
+        self.retained_visits = 0.0
+        self.retained_fraction = 0.0
+        self._pending = False
+
+    # -- engine-facing tree custody ---------------------------------------
+    def _checkout(self) -> Tree | None:
+        """Engine takes the tree at admission (single-owner discipline:
+        ``run_chunk`` donates its buffers, so the session must not hold a
+        reference while the search runs)."""
+        tree, self.tree = self.tree, None
+        return tree
+
+    def _deliver(self, tree: Tree, result: dict) -> None:
+        """Engine hands the searched tree back at retirement."""
+        self.tree = tree if self.reuse else None
+        self.last_result = result
+        self._pending = False
+
+    # -- client API -------------------------------------------------------
+    def make_request(self, rid: Any = None, *, n_playouts: int = 512,
+                     n_tasks: int = 16, cp: float = 1.0,
+                     seed: int | None = None,
+                     deadline_s: float | None = None) -> GameRequest:
+        """A ``GameRequest`` for the session's current position.
+
+        ``seed`` defaults to ``base_seed + move number`` — deterministic
+        per-move streams, so whole games replay bit-identically.
+        """
+        if self._pending:
+            raise RuntimeError(
+                f"session {self.name}: a request is already in flight — "
+                "the device tree has one owner; await its result and "
+                "play() before searching again")
+        self._pending = True
+        return GameRequest(
+            rid=(rid if rid is not None
+                 else f"{self.name}#mv{len(self.moves)}"),
+            game=self.game, board_size=self.board_size,
+            to_move=self.to_move, n_playouts=n_playouts, n_tasks=n_tasks,
+            cp=cp, seed=(self.base_seed + len(self.moves)
+                         if seed is None else seed),
+            deadline_s=deadline_s, board=np.asarray(self.board),
+            session=self)
+
+    def play(self, move: int) -> None:
+        """Commit a move: update the position and re-root the tree onto the
+        played child so the next search starts warm.
+
+        Any legal move works — the opponent's reply included, whether or
+        not this session's searches ever expanded it (an unseen move just
+        yields a 1-node tree, a cold start in warm clothing).
+        """
+        if self._pending:
+            raise RuntimeError(
+                f"session {self.name}: cannot play() while a request is in "
+                "flight — the engine owns the tree")
+        move = int(move)
+        legal = np.asarray(self.game_obj.legal_mask(self.board))
+        if not legal[move]:
+            raise ValueError(
+                f"session {self.name}: illegal move {move} for "
+                f"{self.game} at move {len(self.moves)}")
+        if self.reuse and self.tree is not None:
+            before = float(self.tree.visits[0])
+            self.tree = reroot_tree(self.tree, move)
+            self.retained_visits = float(self.tree.visits[0])
+            self.retained_fraction = (self.retained_visits / before
+                                      if before > 0 else 0.0)
+        else:
+            self.tree = None
+            self.retained_visits = 0.0
+            self.retained_fraction = 0.0
+        self.board = self.game_obj.place(
+            self.board, jnp.int32(move), jnp.int8(self.to_move))
+        self.to_move = 3 - self.to_move
+        self.moves.append(move)
+
+    def winner(self) -> int:
+        """Game status at the current position via ``Game.winner_probe``:
+        -1 ongoing, 0 draw, 1/2 the winning player."""
+        return int(self.game_obj.winner_probe(self.board))
+
+    def over(self) -> bool:
+        return self.winner() >= 0
 
 
 # the protocol-level name; TPFIFO is the (only) scheduling flavor today

@@ -208,6 +208,47 @@ def test_playout_batch_bit_identical_to_scalar(seed, name):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.parametrize("name", GAMES)
+def test_winner_probe_contract(name):
+    """``winner_probe`` is the PARTIAL-board status probe (-1 ongoing,
+    0 draw, 1|2 winner) the session layer polls after every move — unlike
+    ``winner_batch``, whose contract only covers terminal boards. An empty
+    board is ongoing; a legally played-out terminal board must agree with
+    ``winner_batch``."""
+    g = make(name)
+    assert int(g.winner_probe(g.init_board())) == -1
+    rng = np.random.default_rng(23)
+    b, _ = played_board(g, rng, g.max_moves + 1)
+    w = int(g.winner_probe(b))
+    assert w == int(g.winner_batch(b[None])[0])
+    assert w >= 0
+
+
+def test_winner_probe_detects_midboard_wins():
+    """A win must register the move it appears, long before the board
+    fills: a black top-bottom chain on hex, a black five on gomoku."""
+    size = 5
+    hexes = make("hex")
+    b = np.zeros(size * size, dtype=np.int8)
+    for r in range(size):
+        b[r * size] = 1                       # column 0, rows 0..4
+    assert int(hexes.winner_probe(jnp.asarray(b))) == 1
+    g5 = game_mod.make_game("gomoku", size)
+    assert int(g5.winner_probe(jnp.asarray(b))) == 1  # a vertical five
+    b[2 * size] = 0                           # break both chains
+    assert int(hexes.winner_probe(jnp.asarray(b))) == -1
+
+
+def test_winner_probe_gomoku_draw_only_when_full():
+    """The forced-draw position stays ONGOING while empties remain (either
+    player could still move) and becomes a DRAW once filled."""
+    g5 = game_mod.make_game("gomoku", 5)      # the draw position is 5x5
+    b = drawn_gomoku_position()
+    assert int(g5.winner_probe(b)) == -1
+    full = jnp.asarray(np.where(np.asarray(b) == 0, 1, np.asarray(b)))
+    assert int(g5.winner_probe(full)) == 0
+
+
 # ----------------------------------------------------- search through seam ----
 @settings(max_examples=8, deadline=None)
 @given(seed=st.integers(0, 2**31 - 1), name=st.sampled_from(GAMES),
