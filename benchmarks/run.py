@@ -30,8 +30,8 @@ def main():
 
     from benchmarks import (ablate_vloss, fig5_cilkview, fig7_speedup,
                             fig9_mapping, kernels_micro, roofline_table,
-                            root_parallel, selfplay, serve_games,
-                            table2_sequential, tpfifo)
+                            root_parallel, selfplay, serve_chaos,
+                            serve_games, table2_sequential, tpfifo)
     from benchmarks.common import save_result
 
     n_po = 8192 if args.full else 1024
@@ -56,6 +56,10 @@ def main():
         "root_parallel": lambda: root_parallel.run(n_playouts=n_po),
         "tpfifo": lambda: tpfifo.run(n_requests=48 if args.full else 24),
         "serve_games": lambda: serve_games.run(
+            n_requests=32 if args.full else 16),
+        # fault-rate sweep: goodput/latency under injected chaos with
+        # bit-identical recovery + zero recompiles asserted inside
+        "serve_chaos": lambda: serve_chaos.run(
             n_requests=32 if args.full else 16),
         "selfplay": lambda: selfplay.run(
             n_playouts=4096 if args.full else 1024,
@@ -152,6 +156,10 @@ def write_mcts_trajectory(results: dict) -> str | None:
         # cross-move tree reuse: warm vs cold move latency and the mean
         # visits-retained fraction over a self-play game (see selfplay.py)
         payload["selfplay"] = results["selfplay"]["selfplay"]
+    if "serve_chaos" in results:
+        # resilience: goodput/p50/p95 vs injected fault rate, with
+        # bit-identical recovery and zero recompiles asserted in-run
+        payload["chaos"] = results["serve_chaos"]["chaos"]
     km = results.get("kernels_micro")
     if km and "hex_winner" in km:
         # fused playout-evaluation throughput per (board, W) case + the
@@ -221,6 +229,18 @@ def _summ(name: str, res: dict) -> dict:
                 "p95_vs_one_per_core": round(s["p95_vs_one_per_core"], 2),
                 "preemptions": s["preemptions"],
                 "recompiles": s["recompiles"]}
+    if name == "serve_chaos":
+        c = res["chaos"]
+        return {"fault_rates": c["fault_rates"],
+                "goodput_playouts_per_s": [round(g) for g in
+                                           c["goodput_playouts_per_s"]],
+                "latency_p95_ms": [round(v * 1e3) for v in
+                                   c["latency_p95_s"]],
+                "retries": c["retries"],
+                "quarantined": c["quarantined"],
+                "goodput_at_max_rate_vs_clean": round(
+                    c["goodput_at_max_rate_vs_clean"], 2),
+                "recompiles": c["recompiles"]}
     if name == "selfplay":
         s = res["selfplay"]
         return {"warm_p50_ms": round(s["warm_move_p50_s"] * 1e3),

@@ -1,0 +1,197 @@
+"""Chaos serving: fault-rate sweep against the TPFIFO game engine.
+
+The robustness twin of ``serve_games``: the same mixed hex+gomoku Poisson
+trace is replayed at increasing injected-fault rates (seeded
+``FaultPlan``s: dispatch failures, NaN root-stat poisoning, clock stalls,
+duplicate submissions — ``repro.serve.resilience``) and the engine must
+absorb them all: every non-shed request completes, answered results are
+**bit-identical** to the rate-0 run of the same seeds (recovery replays
+from committed snapshots, and round RNG depends only on the schedule),
+and the whole sweep adds ZERO ``run_chunk`` jit entries (asserted).
+
+Reported per fault rate: goodput (answered playouts/s), p50/p95 move
+latency, retries / quarantined slots / fired-fault counts — the cost of
+resilience as a measured curve, not a vibe. Feeds BENCH_mcts.json under
+the ``chaos`` key.
+
+    PYTHONPATH=src python benchmarks/serve_chaos.py [--smoke|--full]
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+
+if __package__ in (None, ""):   # `python benchmarks/serve_chaos.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from repro.core.gscpm import run_chunk
+from repro.serve.games import GameRequest, TPFIFOGameEngine
+from repro.serve.resilience import FaultInjector, FaultPlan
+
+GAMES = ("hex", "gomoku")
+
+
+def make_trace(n_requests: int, rate_rps: float, board_size: int,
+               playout_choices, seed: int):
+    rng = np.random.default_rng(seed)
+    trace, t = [], 0.0
+    for rid in range(n_requests):
+        t += float(rng.exponential(1.0 / rate_rps))
+        npo = int(rng.choice(playout_choices))
+        trace.append((t, dict(
+            rid=rid, game=GAMES[rid % len(GAMES)], board_size=board_size,
+            n_playouts=npo, n_tasks=max(1, npo // 8),
+            cp=float(rng.uniform(0.8, 1.4)), seed=rid)))
+    return trace
+
+
+def _requests(trace):
+    return [(t, GameRequest(**kw)) for t, kw in trace]
+
+
+def serve_chaos(trace, fault_rate: float, *, slots, grain, n_workers,
+                tree_cap, quarantine_after, chaos_seed,
+                fault_horizon: int = 4096) -> tuple[dict, list]:
+    """One serve of the trace at ``fault_rate``; returns (stats, requests)."""
+    injector = None
+    if fault_rate > 0:
+        plan = FaultPlan.generate(seed=chaos_seed, n_ticks=fault_horizon,
+                                  n_slots=slots * len(GAMES),
+                                  rate=fault_rate)
+        injector = FaultInjector(plan)
+    eng = TPFIFOGameEngine(
+        n_slots=slots, grain=grain, n_workers=n_workers, tree_cap=tree_cap,
+        injector=injector, quarantine_after=quarantine_after,
+        retry_backoff=(1, 8))
+    reqs = _requests(trace)
+    eng.run_trace(list(reqs), max_ticks=200_000)
+    st = eng.stats().as_dict()
+    answered = [r for _, r in reqs if r.result["status"] == "answered"]
+    playouts = sum(r.result["playouts"] for r in answered)
+    st.update(
+        fault_rate=fault_rate,
+        n_answered=len(answered),
+        goodput_playouts_per_s=playouts / max(st["wall_s"], 1e-9),
+        faults=(injector.summary() if injector else
+                {"planned": 0, "fired": {}, "fired_total": 0}),
+    )
+    return st, [r for _, r in reqs]
+
+
+def run(n_requests: int = 16, slots: int = 2, grain: int = 2,
+        n_workers: int = 8, board_size: int = 7, rate_rps: float = 64.0,
+        tree_cap: int = 1 << 11, quarantine_after: int = 3,
+        playout_choices=(128, 128, 256, 256, 512), seed: int = 0,
+        chaos_seed: int = 1234, fault_rates=(0.0, 0.05, 0.1, 0.2),
+        smoke: bool = False) -> dict:
+    if smoke:
+        n_requests, board_size, tree_cap = 6, 5, 512
+        playout_choices, rate_rps = (32, 64, 128), 50.0
+        fault_rates = (0.0, 0.1, 0.3)
+
+    trace = make_trace(n_requests, rate_rps, board_size, playout_choices,
+                       seed)
+
+    # compile off the clock: one tiny request per game class
+    warm_eng = TPFIFOGameEngine(n_slots=slots, grain=grain,
+                                n_workers=n_workers, tree_cap=tree_cap)
+    for g in GAMES:
+        warm_eng.submit(GameRequest(rid=f"warm-{g}", game=g,
+                                    board_size=board_size, n_playouts=8,
+                                    n_tasks=2, seed=0))
+    warm_eng.run()
+    cache_before = run_chunk._cache_size()
+
+    sweep, reference = [], None
+    for rate in fault_rates:
+        st, reqs = serve_chaos(
+            trace, rate, slots=slots, grain=grain, n_workers=n_workers,
+            tree_cap=tree_cap, quarantine_after=quarantine_after,
+            chaos_seed=chaos_seed)
+        # every non-shed request completed (the never-crash pin)
+        unresolved = [r.rid for r in reqs if not r.done]
+        assert not unresolved, f"rate {rate}: unresolved rids {unresolved}"
+        if rate == 0.0:
+            reference = {r.rid: r.result for r in reqs}
+        elif reference is not None:
+            # bit-identical recovery: every fully-run answered search
+            # matches the fault-free serve of the same seeds
+            for r in reqs:
+                res = r.result
+                if (res["status"] != "answered"
+                        or res["rounds"] != res["rounds_total"]):
+                    continue
+                ref = reference[r.rid]
+                np.testing.assert_array_equal(res["root_visits"],
+                                              ref["root_visits"])
+                np.testing.assert_array_equal(res["root_wins"],
+                                              ref["root_wins"])
+        sweep.append(st)
+
+    recompiles = run_chunk._cache_size() - cache_before
+    assert recompiles == 0, \
+        f"chaos churn grew the jit cache by {recompiles}"
+
+    base = sweep[0]
+    return {
+        "config": {"n_requests": n_requests, "slots": slots, "grain": grain,
+                   "n_workers": n_workers, "board_size": board_size,
+                   "rate_rps": rate_rps, "tree_cap": tree_cap,
+                   "quarantine_after": quarantine_after,
+                   "playout_choices": list(playout_choices), "seed": seed,
+                   "chaos_seed": chaos_seed,
+                   "fault_rates": list(fault_rates), "smoke": smoke},
+        "sweep": sweep,
+        "chaos": {
+            "games": list(GAMES),
+            "board": f"{board_size}x{board_size}",
+            "n_requests": n_requests,
+            "fault_rates": list(fault_rates),
+            "goodput_playouts_per_s": [s["goodput_playouts_per_s"]
+                                       for s in sweep],
+            "latency_p50_s": [s["latency_p50"] for s in sweep],
+            "latency_p95_s": [s["latency_p95"] for s in sweep],
+            "retries": [s["n_retries"] for s in sweep],
+            "quarantined": [s["n_quarantined"] for s in sweep],
+            "faults_fired": [s["faults"]["fired_total"] for s in sweep],
+            "goodput_at_max_rate_vs_clean": (
+                sweep[-1]["goodput_playouts_per_s"]
+                / max(base["goodput_playouts_per_s"], 1e-9)),
+            "recompiles": recompiles,
+        },
+    }
+
+
+def main():
+    import argparse
+
+    from benchmarks.common import save_result
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny trace + 3 rates (CI rot-guard, <1 min)")
+    p.add_argument("--full", action="store_true")
+    args = p.parse_args()
+
+    out = run(smoke=args.smoke, n_requests=32 if args.full else 16)
+    for s in out["sweep"]:
+        print(f"rate {s['fault_rate']:.2f}: "
+              f"{s['goodput_playouts_per_s']:10.0f} playouts/s goodput   "
+              f"p50/p95 {s['latency_p50']*1e3:6.0f}/"
+              f"{s['latency_p95']*1e3:6.0f} ms   "
+              f"retries {s['n_retries']}  quarantined {s['n_quarantined']}  "
+              f"faults fired {s['faults']['fired_total']}")
+    c = out["chaos"]
+    print(f"goodput at max fault rate vs clean: "
+          f"{c['goodput_at_max_rate_vs_clean']:.2f}x   "
+          f"recompiles across sweep: {c['recompiles']}")
+    path = save_result("serve_chaos", out)
+    print("->", path)
+
+
+if __name__ == "__main__":
+    main()

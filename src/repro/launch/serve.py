@@ -97,6 +97,19 @@ def main():
                    help="thread the device-plane SearchMetrics accumulator "
                         "through every served search (game serving only; "
                         "results stay bit-identical)")
+    p.add_argument("--chaos-rate", type=float, default=0.0,
+                   help="inject a seeded Bernoulli fault plan at this "
+                        "per-(tick,slot) rate — dispatch errors, NaN "
+                        "poisoning, clock stalls, duplicate submissions "
+                        "(game serving only; DESIGN.md §17)")
+    p.add_argument("--chaos-seed", type=int, default=0,
+                   help="fault-plan seed: same seed, same fault sequence")
+    p.add_argument("--max-queue", type=int, default=None,
+                   help="bounded admission: shed requests beyond this many "
+                        "queued per game class (status='shed')")
+    p.add_argument("--quarantine-after", type=int, default=None,
+                   help="quarantine a slot after this many consecutive "
+                        "quantum failures (the engine serves on survivors)")
     args = p.parse_args()
     args.tracer, args.registry = make_observers(args)
 
@@ -168,20 +181,32 @@ def serve_games(args) -> None:
 
     games = (["hex", "gomoku"] if args.mcts_game == "mixed"
              else [args.mcts_game])
+    injector = None
+    if args.chaos_rate > 0:
+        from repro.serve.resilience import FaultInjector, FaultPlan
+        injector = FaultInjector(FaultPlan.generate(
+            seed=args.chaos_seed, n_ticks=4096,
+            n_slots=args.slots * len(games), rate=args.chaos_rate))
     eng = TPFIFOGameEngine(n_slots=args.slots, grain=args.grain,
                            policy=args.policy,
                            preempt_quanta=args.preempt_quanta,
                            n_workers=args.workers,
                            metrics=args.device_metrics,
+                           max_queue=args.max_queue,
+                           quarantine_after=args.quarantine_after,
+                           injector=injector,
                            tracer=args.tracer, registry=args.registry)
     rng = np.random.default_rng(args.seed)
+    shed = 0
     for rid in range(args.requests):
         # heterogeneous budgets around --playouts (the irregular workload)
         npo = max(1, int(args.playouts * rng.choice((0.5, 1.0, 2.0))))
-        eng.submit(GameRequest(rid=rid, game=games[rid % len(games)],
-                               board_size=args.board_size, n_playouts=npo,
-                               n_tasks=args.tasks, seed=args.seed + rid,
-                               deadline_s=args.deadline))
+        if not eng.submit(GameRequest(
+                rid=rid, game=games[rid % len(games)],
+                board_size=args.board_size, n_playouts=npo,
+                n_tasks=args.tasks, seed=args.seed + rid,
+                deadline_s=args.deadline)):
+            shed += 1
     t0 = time.perf_counter()
     done = eng.run()
     dt = time.perf_counter() - t0
@@ -192,6 +217,8 @@ def serve_games(args) -> None:
     for r in done:
         res = r.result
         tag = " (deadline)" if res["deadline_expired"] else ""
+        if res.get("retries"):
+            tag += f" ({res['retries']} retries)"
         print(f"  req {r.rid}: {res['game']:>6} {res['board_size']}x"
               f"{res['board_size']} -> move {res['best_move']:>3} "
               f"value {res['root_value']:+.3f}  {res['playouts']} playouts, "
@@ -201,6 +228,12 @@ def serve_games(args) -> None:
           f"{st.queue_wait_p95*1e3:.0f} ms, move latency p50/p95 "
           f"{st.latency_p50*1e3:.0f}/{st.latency_p95*1e3:.0f} ms, "
           f"{st.quanta} quanta, {st.n_preemptions} preemptions")
+    if injector is not None or shed or st.n_retries or st.n_quarantined:
+        fired = injector.summary() if injector is not None else None
+        print(f"  resilience: {st.n_retries} retries, "
+              f"{st.n_quarantined} quarantined slots, {st.n_shed} shed"
+              + (f", faults fired {fired['fired_total']}"
+                 f"/{fired['planned']} {fired['fired']}" if fired else ""))
     if args.device_metrics and done:
         dm = done[0].result["metrics"]
         print(f"  device metrics (req {done[0].rid}): "

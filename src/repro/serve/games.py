@@ -40,6 +40,7 @@ from __future__ import annotations
 import collections
 import contextlib
 import dataclasses
+import math
 from typing import Any
 
 import jax
@@ -50,6 +51,8 @@ from repro.core import game as game_mod
 from repro.core import scheduler as sched
 from repro.core.gscpm import GSCPMConfig, run_schedule_round, warm_tree_check
 from repro.core.tree import Tree, init_tree, reroot_tree, root_summary
+from repro.serve import resilience
+from repro.serve.resilience import InjectedFaultError, ResultGuardError
 from repro.serve.tpfifo import Ticket, TPFIFODriver
 
 
@@ -111,6 +114,7 @@ class _SearchState:
     session: Any = None             # owning GameSession (tree returns to it)
     reused_nodes: int = 0           # warm-start inheritance (beyond the root)
     reused_visits: float = 0.0      # root evidence the search started from
+    snap: Any = None                # last committed SearchSnapshot (chaos)
 
 
 def warm_budget(n_playouts: int, n_tasks: int, n_workers: int,
@@ -162,10 +166,24 @@ class TPFIFOGameEngine(TPFIFODriver):
                  n_workers: int = 8, vl_rounds: int = 1,
                  tree_cap: int = 1 << 12, select_noise: float = 1e-3,
                  inner_scheduler: str = "fifo", metrics: bool = False,
+                 max_queue: int | None = None,
+                 quarantine_after: int | None = None,
+                 injector=None, retry_backoff: tuple[int, int] = (1, 8),
+                 guard: bool = True, snapshots: bool | None = None,
                  tracer=None, registry=None):
         super().__init__(n_slots, grain=grain, policy=policy,
-                         preempt_quanta=preempt_quanta, tracer=tracer,
-                         registry=registry)
+                         preempt_quanta=preempt_quanta,
+                         max_queue=max_queue,
+                         quarantine_after=quarantine_after,
+                         injector=injector, retry_backoff=retry_backoff,
+                         tracer=tracer, registry=registry)
+        # the result guard runs on every retirement; snapshots (needed to
+        # retry from the last committed round instead of round 0) default
+        # to on exactly when an injector is attached — a no-chaos engine
+        # pays zero copy cost
+        self.guard = guard
+        self._snapshots = (injector is not None) if snapshots is None \
+            else bool(snapshots)
         self.slots_per_class = n_slots
         self.template = GSCPMConfig(
             n_workers=n_workers, vl_rounds=vl_rounds, tree_cap=tree_cap,
@@ -202,16 +220,70 @@ class TPFIFOGameEngine(TPFIFODriver):
         self.B = self.slots_per_class * max(1, len(self.pools))
 
     # -- queue ------------------------------------------------------------
-    def submit(self, req: GameRequest, at: float | None = None):
+    def submit(self, req: GameRequest, at: float | None = None) -> bool:
+        """Admission with full request validation (DESIGN.md §17).
+
+        Malformed requests fail HERE with a typed error naming the field,
+        not three quanta later as an XLA shape error that poisons a slot.
+        Returns True if queued; False if deduplicated (rid already
+        pending) or shed (class queue at ``max_queue`` — the request
+        retires immediately with ``status="shed"``).
+        """
         cfg = self.request_cfg(req)
         game = cfg.game_obj        # raises for unregistered game names
-        if req.board is not None and len(req.board) != game.n_cells:
+        if isinstance(req.n_playouts, bool) or not isinstance(
+                req.n_playouts, (int, np.integer)) or req.n_playouts < 1:
             raise ValueError(
-                f"board has {len(req.board)} cells; {req.game} "
-                f"{req.board_size}x{req.board_size} needs {game.n_cells}")
-        if req.n_playouts < 1:
-            raise ValueError(f"n_playouts must be >= 1, got {req.n_playouts}")
-        super().submit(req, at=at)
+                f"n_playouts must be a positive int, got {req.n_playouts!r}")
+        if isinstance(req.n_tasks, bool) or not isinstance(
+                req.n_tasks, (int, np.integer)) or req.n_tasks < 1:
+            raise ValueError(
+                f"n_tasks must be a positive int, got {req.n_tasks!r}")
+        if req.to_move not in (1, 2):
+            raise ValueError(f"to_move must be 1 or 2, got {req.to_move!r}")
+        try:
+            cp = float(req.cp)
+        except (TypeError, ValueError):
+            raise TypeError(
+                f"cp must be a real number, got {type(req.cp).__name__}")
+        if not math.isfinite(cp) or cp < 0:
+            raise ValueError(f"cp must be finite and >= 0, got {req.cp!r}")
+        if req.deadline_s is not None:
+            try:
+                dl = float(req.deadline_s)
+            except (TypeError, ValueError):
+                raise TypeError(f"deadline_s must be a real number or None, "
+                                f"got {type(req.deadline_s).__name__}")
+            if not math.isfinite(dl) or dl < 0:
+                raise ValueError(
+                    f"deadline_s must be finite and >= 0, "
+                    f"got {req.deadline_s!r}")
+        if req.board is not None:
+            b = np.asarray(req.board)
+            if b.dtype.kind not in "iu":
+                raise TypeError(
+                    f"board dtype must be integer (int8 positions), "
+                    f"got {b.dtype}")
+            if b.shape != (game.n_cells,):
+                raise ValueError(
+                    f"board shape {b.shape} != ({game.n_cells},); {req.game} "
+                    f"{req.board_size}x{req.board_size} needs a flat "
+                    f"({game.n_cells},) array")
+            if not np.isin(b, (0, 1, 2)).all():
+                raise ValueError(
+                    "board cells must be 0 (empty), 1, or 2")
+        return super().submit(req, at=at)
+
+    def _queue_load(self, req: GameRequest) -> int:
+        """Shedding is per game class: one game's burst fills only its own
+        admission budget, it cannot starve another game's queue."""
+        ck = self.request_cfg(req)
+        return sum(1 for t in self.queue if self.request_cfg(t.req) == ck)
+
+    def _healthy_peers(self, slot_key: tuple[GSCPMConfig, int]) -> int:
+        ck, _ = slot_key
+        return sum(1 for i in range(self.slots_per_class)
+                   if (ck, i) not in self.quarantined)
 
     # -- TPFIFODriver hooks ----------------------------------------------
     def _work_estimate(self, t: Ticket) -> int:
@@ -237,14 +309,26 @@ class TPFIFOGameEngine(TPFIFODriver):
         skipped: collections.deque[Ticket] = collections.deque()
         while self.queue:
             t = self.queue.popleft()
-            ck = self.request_cfg(t.req)
-            pool = self.pools.setdefault(ck, [None] * self.slots_per_class)
-            if None not in pool:
+            if t.not_before > self._ticks:      # retry backoff gate
                 skipped.append(t)
                 continue
-            s = pool.index(None)
+            ck = self.request_cfg(t.req)
+            pool = self.pools.setdefault(ck, [None] * self.slots_per_class)
+            s = next((i for i, x in enumerate(pool)
+                      if x is None and (ck, i) not in self.quarantined),
+                     None)
+            if s is None:                       # pool full or quarantined
+                skipped.append(t)
+                continue
             if t.req.rid not in self._states:
-                self._states[t.req.rid] = self._make_state(ck, t)
+                st = self._make_state(ck, t)
+                if self._snapshots:
+                    # round-0 commit point: a fault before the first
+                    # quantum completes rolls back HERE (preserving a warm
+                    # session tree) instead of rebuilding from scratch
+                    st.snap = resilience.snapshot_search(
+                        st.tree, st.metrics, 0, 0, len(t.req.out))
+                self._states[t.req.rid] = st
             if t.t_admit is None:
                 t.t_admit = self._now()
             t.quanta_at_admit = t.quanta
@@ -320,9 +404,23 @@ class TPFIFOGameEngine(TPFIFODriver):
         if not live:
             return 0
         m = self._tick_m()
-        for _, _, t in live:
-            self._run_slot(t, m)
+        failed: set = set()
         for ck, s, t in live:
+            # fault containment boundary: a quantum that raises (injected
+            # dispatch error, device loss, anything) is contained to ITS
+            # slot — the search rolls back to its last committed snapshot
+            # and requeues with backoff, the slot takes a quarantine
+            # strike, and every other slot's quantum still runs
+            try:
+                self._run_slot(t, m, slot_key=(ck, s))
+            except Exception as err:   # noqa: BLE001 — containment seam
+                self._fail_slot(ck, s, t, err)
+                failed.add(t.req.rid)
+            else:
+                self._note_slot_ok((ck, s))
+        for ck, s, t in live:
+            if t.req.rid in failed:
+                continue
             st = self._states[t.req.rid]
             if st.expired or st.round_idx >= len(st.schedule):
                 self._retire(ck, s, t)
@@ -331,7 +429,14 @@ class TPFIFOGameEngine(TPFIFODriver):
         self._sync_active()
         return len(live)
 
-    def _run_slot(self, t: Ticket, m: int) -> None:
+    def _flat_slot(self, slot_key: tuple[GSCPMConfig, int]) -> int:
+        """Flatten a (class, slot) key to the injector's slot index space
+        (pool insertion order × slots_per_class + slot)."""
+        ck, s = slot_key
+        return list(self.pools).index(ck) * self.slots_per_class + s
+
+    def _run_slot(self, t: Ticket, m: int,
+                  slot_key: tuple[GSCPMConfig, int] | None = None) -> None:
         """One quantum: up to ``m`` schedule rounds of this request's
         search — the exact ``run_schedule_round`` calls (same key, same
         Round sequence) the uninterrupted driver would make, which is the
@@ -340,6 +445,13 @@ class TPFIFOGameEngine(TPFIFODriver):
         covered (blocking on the device at span end so the duration is
         honest — a profiling perturbation, documented in DESIGN.md §15)."""
         st = self._states[t.req.rid]
+        if self.injector is not None and slot_key is not None:
+            ev = self.injector.dispatch_fault(self._flat_slot(slot_key))
+            if ev is not None:
+                self._record_injected(ev)
+                raise InjectedFaultError(
+                    f"injected dispatch failure: tick {self._ticks}, "
+                    f"slot {self._flat_slot(slot_key)}, rid {t.req.rid}")
         span_args = {"rid": t.req.rid, "game": st.cfg.game, "rounds": 0,
                      "iterations": 0, "lane_iterations": 0,
                      "workers": st.cfg.n_workers} if self.tracer else None
@@ -379,24 +491,62 @@ class TPFIFOGameEngine(TPFIFODriver):
                         int(rnd.active.sum()) * rnd.m)
             if self.tracer and span_args["rounds"] > 0:
                 jax.block_until_ready(st.tree.visits)
+        # commit point: snapshot the post-quantum state to the host, THEN
+        # apply any planned poison — a later guard rejection rolls back to
+        # here and replays the remaining rounds bit-identically. A dirty
+        # snapshot (corruption that predates the copy — e.g. a poisoned
+        # tree that ran another quantum before the guard could see it) must
+        # NOT overwrite the last good commit point: rolling back into the
+        # corruption would retry forever.
+        if self._snapshots:
+            snap = resilience.snapshot_search(
+                st.tree, st.metrics, st.round_idx, st.playouts,
+                len(t.req.out))
+            if resilience.snapshot_is_clean(snap):
+                st.snap = snap
+        if self.injector is not None and slot_key is not None:
+            ev = self.injector.poison(self._flat_slot(slot_key))
+            if ev is not None:
+                self._record_injected(ev)
+                st.tree = resilience.poison_root_stats(st.tree)
 
     # -- slot lifecycle ---------------------------------------------------
     def _retire(self, ck: GSCPMConfig, s: int, t: Ticket) -> None:
-        st = self._states.pop(t.req.rid)
+        st = self._states[t.req.rid]
         with (self.tracer.span("device_sync", {"rid": t.req.rid})
               if self.tracer else contextlib.nullcontext()):
             jax.block_until_ready(st.tree.visits)
+        warm = st.session is not None or st.reused_nodes \
+            or st.reused_visits > 0
         res = root_summary(
             st.tree, st.cfg.game_obj.n_actions,
-            reused_visits=(int(st.reused_visits)
-                           if st.session is not None or st.reused_nodes
-                           else None))
+            reused_visits=int(st.reused_visits) if warm else None)
+        if self.guard:
+            # host-side result guard (DESIGN.md §17): a corrupted answer
+            # never ships — it becomes a retry from the last committed
+            # snapshot, and the slot takes a quarantine strike
+            bad = resilience.validate_result(
+                res, None if warm else st.playouts)
+            if bad:
+                if self.tracer:
+                    self.tracer.instant("guard_reject", {
+                        "rid": t.req.rid, "game": st.cfg.game, "slot": s,
+                        "violations": "; ".join(bad)})
+                if self.registry:
+                    self.registry.counter(
+                        "serve_guard_failures_total",
+                        "retired answers rejected by the result "
+                        "guard").inc()
+                self._fail_slot(ck, s, t, ResultGuardError("; ".join(bad)))
+                return
+        self._states.pop(t.req.rid)
         t.t_done = self._now()
         res.update(
             game=st.cfg.game, board_size=st.cfg.board_size,
             playouts=st.playouts, rounds=st.round_idx,
             rounds_total=len(st.schedule), deadline_expired=st.expired,
-            preemptions=t.preemptions,
+            status="deadline_expired" if st.expired else "answered",
+            retries=t.retries, preemptions=t.preemptions,
             queue_wait_s=t.t_admit - t.t_submit,
             latency_s=t.t_done - t.t_submit)
         if st.session is not None or st.reused_nodes:
@@ -444,6 +594,42 @@ class TPFIFOGameEngine(TPFIFODriver):
         if self.registry:
             self.registry.counter("serve_preemptions_total",
                                   "over-budget requests requeued").inc()
+
+    def _fail_slot(self, ck: GSCPMConfig, s: int, t: Ticket,
+                   err: Exception) -> None:
+        """Contain a slot failure: free the slot, roll the search back to
+        its last committed snapshot (or rebuild it from round 0), requeue
+        the ticket with exponential backoff, and count a quarantine strike
+        against the slot. The driver loop never sees the exception.
+
+        Rollback restores the EXACT device state of the commit point —
+        tree, metrics accumulator, round index, committed-playouts count,
+        and the ``out`` progress log — so the replayed rounds reproduce
+        the uninterrupted search bit for bit (RNG streams depend only on
+        ``(key, round.task_ids)``, never on wall-clock or retry count).
+        """
+        self.pools[ck][s] = None
+        st = self._states[t.req.rid]
+        if st.snap is not None:
+            tree, metrics = resilience.restore_search(st.snap)
+            st.tree = tree
+            st.metrics = metrics
+            st.round_idx = st.snap.round_idx
+            st.playouts = st.snap.playouts
+            st.expired = False
+            del t.req.out[st.snap.out_len:]
+        else:
+            # no snapshot discipline (no injector attached and snapshots
+            # not forced): the device state is suspect, so rebuild the
+            # search from scratch — still a correct answer, just a cold
+            # restart (a lost warm-session tree falls back to full budget)
+            self._states.pop(t.req.rid)
+            del t.req.out[:]
+            self._states[t.req.rid] = self._make_state(
+                self.request_cfg(t.req), t)
+        self._requeue_for_retry(t, err)
+        self._note_slot_failure((ck, s))
+        self._sync_active()
 
 
 # ---------------------------------------------------------------- session ----

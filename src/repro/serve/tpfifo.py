@@ -49,6 +49,7 @@ import dataclasses
 import functools
 import math
 import time
+import warnings
 from typing import Any, NamedTuple
 
 import jax
@@ -78,6 +79,10 @@ class Ticket:
     quanta: int = 0                     # completed quanta (all segments)
     quanta_at_admit: int = 0            # snapshot at current admission
     preemptions: int = 0
+    retries: int = 0                    # failure-driven requeues (faults,
+                                        # guard rejections) — NOT preemptions
+    not_before: int = 0                 # earliest tick this ticket may be
+                                        # re-admitted (retry backoff gate)
     seg_base: int = 0                   # len(req.out) at current admission
     plan: list[int] | None = None       # remaining quantum sizes
     plan_idx: int = 0
@@ -99,9 +104,17 @@ class QueueStats:
     service_p95: float
     latency_p50: float
     latency_p95: float
+    # resilience telemetry (PR 9): failure-driven requeues, shed + still-
+    # unfinished request counts, quarantined slots — defaults keep older
+    # call sites and serialized stats comparable
+    n_retries: int = 0
+    n_shed: int = 0
+    n_quarantined: int = 0
+    n_unfinished: int = 0
 
     @classmethod
-    def from_tickets(cls, tickets: list[Ticket]) -> "QueueStats":
+    def from_tickets(cls, tickets: list[Ticket], *, n_shed: int = 0,
+                     n_quarantined: int = 0) -> "QueueStats":
         # progress accounting covers ALL tickets — a run that preempted
         # requests but finished none still reports its preemptions, quanta,
         # and committed tokens (they live in req.out across requeues);
@@ -109,9 +122,14 @@ class QueueStats:
         n_preempt = sum(t.preemptions for t in tickets)
         quanta = sum(t.quanta for t in tickets)
         tokens = sum(len(t.req.out) for t in tickets)
+        extras = dict(
+            n_retries=sum(t.retries for t in tickets), n_shed=n_shed,
+            n_quarantined=n_quarantined,
+            n_unfinished=sum(1 for t in tickets if t.t_done is None))
         done = [t for t in tickets if t.t_done is not None]
         if not done:
-            return cls(0, n_preempt, tokens, quanta, 0.0, 0.0, *([0.0] * 6))
+            return cls(0, n_preempt, tokens, quanta, 0.0, 0.0,
+                       *([0.0] * 6), **extras)
         waits = np.asarray([t.t_admit - t.t_submit for t in done])
         service = np.asarray([t.t_done - t.t_admit for t in done])
         latency = np.asarray([t.t_done - t.t_submit for t in done])
@@ -132,6 +150,7 @@ class QueueStats:
             service_p95=float(p(service, 95)),
             latency_p50=float(p(latency, 50)),
             latency_p95=float(p(latency, 95)),
+            **extras,
         )
 
     def as_dict(self) -> dict:
@@ -157,22 +176,41 @@ class TPFIFODriver:
 
     def __init__(self, n_slots: int, grain: int | None = None,
                  policy: str = "fifo", preempt_quanta: int | None = None,
+                 max_queue: int | None = None,
+                 quarantine_after: int | None = None, injector=None,
+                 retry_backoff: tuple[int, int] = (1, 8),
                  tracer=None, registry=None):
         if grain is not None and policy not in (
                 "fifo", "rebalance", "one_per_core", "sequential"):
             raise ValueError(f"unknown TPFIFO policy: {policy!r}")
         if grain is not None and grain < 1:
             raise ValueError(f"grain must be >= 1, got {grain}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        if quarantine_after is not None and quarantine_after < 1:
+            raise ValueError(
+                f"quarantine_after must be >= 1, got {quarantine_after}")
         self.B = n_slots
         self.grain = grain
         self.policy = policy
         self.preempt_quanta = preempt_quanta
+        # resilience knobs (DESIGN.md §17): bounded admission per queue
+        # class, slot quarantine after k CONSECUTIVE failures, retry
+        # backoff of min(base * 2**(retries-1), cap) ticks, and an optional
+        # deterministic FaultInjector driving chaos
+        self.max_queue = max_queue
+        self.quarantine_after = quarantine_after
+        self.injector = injector
+        self.backoff_base, self.backoff_cap = retry_backoff
         self.tracer = tracer
         self.registry = registry
         self.queue: collections.deque[Ticket] = collections.deque()
         self.active: list[Ticket | None] = [None] * n_slots
         self.finished: list[Any] = []            # Request objects (public)
         self.finished_tickets: list[Ticket] = []
+        self.shed: list[Any] = []                # load-shed Request objects
+        self.quarantined: set = set()            # slot keys out of service
+        self._slot_strikes: dict = {}            # slot key -> consecutive fails
         self.admission_order: list[Any] = []     # rids, in admission order
         self._t0 = time.perf_counter()
         self._ticks = 0
@@ -181,22 +219,85 @@ class TPFIFODriver:
     def _now(self) -> float:
         return time.perf_counter() - self._t0
 
-    def submit(self, req, at: float | None = None):
+    def _queue_load(self, req) -> int:
+        """Pending requests competing with ``req`` for admission (the
+        ``max_queue`` currency). Engines with partitioned slot pools narrow
+        this to the request's own class."""
+        return len(self.queue)
+
+    def _is_pending(self, rid) -> bool:
+        return (any(t is not None and t.req.rid == rid for t in self.active)
+                or any(t.req.rid == rid for t in self.queue))
+
+    def _shed(self, req) -> None:
+        """Load shedding: retire the request immediately with
+        ``status="shed"`` instead of raising or queueing unboundedly."""
+        req.done = True
+        req.result = {"status": "shed", "reason": "queue_full"}
+        self.shed.append(req)
+        if self.tracer:
+            self.tracer.instant("shed", {"rid": req.rid,
+                                         "queue_depth": len(self.queue)})
+        if self.registry:
+            self.registry.counter(
+                "serve_shed_total",
+                "requests shed at admission (queue full)").inc()
+
+    def submit(self, req, at: float | None = None) -> bool:
         """Enqueue a request; ``at`` overrides the submit timestamp (trace
-        replay records the scheduled arrival, not the injection instant)."""
+        replay records the scheduled arrival, not the injection instant).
+
+        Returns False without queueing when the request is a duplicate of a
+        still-pending rid (client retry storms must not double-serve — the
+        engine's state table is keyed by rid) or when ``max_queue`` sheds
+        it (``req.result["status"] == "shed"``); True when queued.
+        """
+        if self._is_pending(req.rid):
+            if self.tracer:
+                self.tracer.instant("duplicate_dropped", {"rid": req.rid})
+            if self.registry:
+                self.registry.counter(
+                    "serve_duplicates_dropped_total",
+                    "duplicate submissions of a pending rid dropped").inc()
+            return False
+        if self.max_queue is not None and self._queue_load(req) >= \
+                self.max_queue:
+            self._shed(req)
+            return False
         self.queue.append(Ticket(req=req,
                                  t_submit=self._now() if at is None else at))
+        return True
 
     def has_work(self) -> bool:
         return bool(self.queue) or any(t is not None for t in self.active)
 
+    def _next_admissible(self, held: list[Ticket]) -> Ticket | None:
+        """Pop the first queue ticket past its retry-backoff gate; gated
+        tickets go to ``held`` and keep their FIFO position."""
+        while self.queue:
+            t = self.queue.popleft()
+            if t.not_before > self._ticks:
+                held.append(t)
+                continue
+            return t
+        return None
+
+    def _restore_held(self, held: list[Ticket]) -> None:
+        for t in reversed(held):
+            self.queue.appendleft(t)
+
     # -- slot lifecycle ---------------------------------------------------
     def _admit_free_slots(self) -> list[int]:
-        """FIFO admission: every free slot takes the head of the queue."""
+        """FIFO admission: every free, non-quarantined slot takes the first
+        admissible (backoff-gated tickets keep their place) queue head."""
         admitted = []
+        held: list[Ticket] = []
         for s in range(self.B):
-            if self.active[s] is None and self.queue:
-                t = self.queue.popleft()
+            if self.active[s] is None and s not in self.quarantined \
+                    and self.queue:
+                t = self._next_admissible(held)
+                if t is None:
+                    break
                 if t.t_admit is None:
                     t.t_admit = self._now()
                 t.quanta_at_admit = t.quanta
@@ -219,6 +320,7 @@ class TPFIFODriver:
                     self.registry.counter(
                         "serve_admissions_total",
                         "requests admitted into a device slot").inc()
+        self._restore_held(held)
         return admitted
 
     def _retire_slot(self, s: int):
@@ -281,6 +383,85 @@ class TPFIFODriver:
                 and progressed
                 and self._waiting_for(t))
 
+    # -- resilience (DESIGN.md §17) ---------------------------------------
+    def _backoff_ticks(self, retries: int) -> int:
+        """Capped exponential backoff: min(base * 2**(k-1), cap) ticks."""
+        return min(self.backoff_base << max(0, retries - 1),
+                   self.backoff_cap)
+
+    def _requeue_for_retry(self, t: Ticket, err: BaseException) -> None:
+        """Tail-requeue a failed ticket with retry count + backoff gate.
+        FIFO fairness is preserved: the ticket rejoins the queue like a
+        preempted one, and the backoff gate holds its *admission*, not its
+        queue position."""
+        t.retries += 1
+        t.not_before = self._ticks + self._backoff_ticks(t.retries)
+        self.queue.append(t)
+        if self.tracer:
+            self.tracer.instant("retry", {
+                "rid": t.req.rid, "retries": t.retries,
+                "error": type(err).__name__,
+                "not_before_tick": t.not_before})
+        if self.registry:
+            self.registry.counter(
+                "serve_retries_total",
+                "failed dispatches requeued for retry").inc()
+
+    def _healthy_peers(self, slot_key) -> int:
+        """Slots still in service in ``slot_key``'s pool (flat pool here;
+        per-class engines narrow it)."""
+        return self.B - len(self.quarantined)
+
+    def _note_slot_ok(self, slot_key) -> None:
+        self._slot_strikes.pop(slot_key, None)
+
+    def _note_slot_failure(self, slot_key) -> bool:
+        """Record a slot failure; quarantine the slot after
+        ``quarantine_after`` CONSECUTIVE failures — unless it is the last
+        healthy slot of its pool (the engine degrades gracefully on
+        survivors; it never quarantines itself to a standstill)."""
+        strikes = self._slot_strikes.get(slot_key, 0) + 1
+        self._slot_strikes[slot_key] = strikes
+        if (self.quarantine_after is None
+                or strikes < self.quarantine_after
+                or self._healthy_peers(slot_key) <= 1):
+            return False
+        self.quarantined.add(slot_key)
+        self._slot_strikes.pop(slot_key, None)
+        if self.tracer:
+            self.tracer.instant("quarantine", {
+                "slot": str(slot_key), "strikes": strikes})
+        if self.registry:
+            self.registry.counter(
+                "serve_slots_quarantined_total",
+                "slots removed from service after repeated failures").inc()
+        return True
+
+    def _record_injected(self, ev) -> None:
+        """Telemetry for a fault event that actually fired."""
+        self.injector.record_fired(ev)
+        if self.tracer:
+            self.tracer.instant("fault", {
+                "kind": ev.kind, "slot": ev.slot, "tick": self._ticks})
+        if self.registry:
+            self.registry.counter(
+                "serve_faults_injected_total",
+                "fault-injector events that fired").inc()
+
+    def _apply_driver_fault(self, ev) -> None:
+        """Driver-level fault kinds, applied at the top of ``_tick``."""
+        if ev.kind == "clock_stall":
+            # the engine clock jumps forward by stall_s: every deadline
+            # gets closer, queue waits inflate — a simulated GC pause
+            self._t0 -= ev.stall_s
+            self._record_injected(ev)
+        elif ev.kind == "duplicate_submit":
+            victims = ([t.req for t in self.active if t is not None]
+                       + [t.req for t in self.queue])
+            if victims:
+                self._record_injected(ev)
+                self.submit(victims[ev.slot % len(victims)])
+
     # -- grain accounting -------------------------------------------------
     def _work_estimate(self, t: Ticket) -> int:
         """Micro-steps this admission segment needs (engine-specific)."""
@@ -325,7 +506,14 @@ class TPFIFODriver:
     # -- run loops --------------------------------------------------------
     def _tick(self):
         """One observed engine tick: step(), wrapped in a trace span when a
-        tracer is attached, plus queue/slot gauge updates."""
+        tracer is attached, plus queue/slot gauge updates. With a
+        ``FaultInjector`` attached, this is also the chaos boundary: the
+        tick's planned events are armed here, driver-level kinds (clock
+        stalls, duplicate submissions) applied immediately, slot-level
+        kinds consumed by the engine around each slot's quantum."""
+        if self.injector is not None:
+            for ev in self.injector.begin_tick(self._ticks):
+                self._apply_driver_fault(ev)
         if self.tracer:
             with self.tracer.span("tick", {"tick": self._ticks}):
                 self.step()
@@ -345,20 +533,47 @@ class TPFIFODriver:
                 sum(t is not None for t in self.active))
         self._ticks += 1
 
-    def run(self, max_ticks: int = 10_000) -> list:
+    def _check_exhausted(self, what: str, budget: int,
+                         on_exhaust: str) -> None:
+        """Tick budget ran out with work still pending: silent work loss is
+        a hang in disguise, so the default is to raise with the unfinished
+        rids (``on_exhaust="warn"`` downgrades to a RuntimeWarning,
+        ``"ignore"`` is the deliberate early-stop escape hatch; either way
+        ``stats().n_unfinished`` reports the leftovers)."""
+        if not self.has_work() or on_exhaust == "ignore":
+            return
+        unfinished = ([t.req.rid for t in self.active if t is not None]
+                      + [t.req.rid for t in self.queue])
+        msg = (f"{what}={budget} exhausted with {len(unfinished)} request(s)"
+               f" unfinished: {unfinished[:8]}"
+               f"{'...' if len(unfinished) > 8 else ''} — raise the tick "
+               "budget, or pass on_exhaust='warn'/'ignore' for a deliberate "
+               "early stop")
+        if on_exhaust == "warn":
+            warnings.warn(msg, RuntimeWarning, stacklevel=3)
+        else:
+            raise RuntimeError(msg)
+
+    def run(self, max_ticks: int = 10_000,
+            on_exhaust: str = "raise") -> list:
         """Drain loop: tick until the queue and all slots are empty.
 
         ``max_ticks`` bounds THIS call (``self._ticks`` keeps the lifetime
         total for telemetry) so a long-lived engine can run repeatedly.
+        Exhausting the budget with tickets still queued or active raises by
+        default (see ``_check_exhausted``) — an engine that quietly returns
+        with unserved work is indistinguishable from one that hung.
         """
         ticks = 0
         while self.has_work() and ticks < max_ticks:
             self._tick()
             ticks += 1
+        self._check_exhausted("max_ticks", max_ticks, on_exhaust)
         return self.finished
 
     def run_trace(self, trace: list[tuple[float, Any]],
-                  max_ticks: int = 1_000_000) -> list:
+                  max_ticks: int = 1_000_000,
+                  on_exhaust: str = "raise") -> list:
         """Replay an arrival trace of ``(arrival_s, request)`` against the
         wall clock (arrival_s relative to the call instant).
 
@@ -380,6 +595,7 @@ class TPFIFODriver:
                 ticks += 1
             elif pending:
                 time.sleep(min(pending[0][0] - now, 1e-3))
+        self._check_exhausted("max_ticks", max_ticks, on_exhaust)
         return self.finished
 
     def stats(self) -> QueueStats:
@@ -388,7 +604,8 @@ class TPFIFODriver:
         still reports its preemptions, quanta, and committed progress."""
         live = [t for t in self.active if t is not None]
         return QueueStats.from_tickets(
-            self.finished_tickets + live + list(self.queue))
+            self.finished_tickets + live + list(self.queue),
+            n_shed=len(self.shed), n_quarantined=len(self.quarantined))
 
 
 # ---------------------------------------------------------- jitted quantum ----
@@ -564,12 +781,12 @@ class TPFIFOEngine(TPFIFODriver):
             live=jnp.zeros((B,), bool))
         self._host_ctx_len = np.ones((B,), np.int32)
 
-    def submit(self, req, at: float | None = None):
+    def submit(self, req, at: float | None = None) -> bool:
         if len(req.prompt) + req.max_new >= self.max_len:
             raise ValueError(
                 f"prompt ({len(req.prompt)}) + max_new ({req.max_new}) "
                 f"must stay below max_len ({self.max_len})")
-        super().submit(req, at=at)
+        return super().submit(req, at=at)
 
     # -- TPFIFODriver hooks ----------------------------------------------
     def _work_estimate(self, t: Ticket) -> int:
@@ -660,12 +877,12 @@ class TPFIFOMCTSEngine(TPFIFODriver):
         self._done = np.zeros((n_slots,), bool)
         self.search_stats: collections.deque = collections.deque(maxlen=256)
 
-    def submit(self, req, at: float | None = None):
+    def submit(self, req, at: float | None = None) -> bool:
         if len(req.prompt) + req.max_new > self.max_prompt_len:
             raise ValueError(
                 f"prompt ({len(req.prompt)}) + max_new ({req.max_new}) "
                 f"exceeds max_prompt_len ({self.max_prompt_len})")
-        super().submit(req, at=at)
+        return super().submit(req, at=at)
 
     def _work_estimate(self, t: Ticket) -> int:
         return t.req.max_new - len(t.req.out)     # commit rounds remaining

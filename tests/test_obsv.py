@@ -358,9 +358,10 @@ def test_engine_stats_cover_active_and_queued_tickets():
         for i in range(3):
             eng.submit(GameRequest(rid=i, game="hex", board_size=SIZE,
                                    n_playouts=512, n_tasks=64, seed=i))
-        eng.run(max_ticks=3)
+        eng.run(max_ticks=3, on_exhaust="ignore")   # deliberate early stop
     st = eng.stats()
     assert st.n_finished == 0
+    assert st.n_unfinished == 3                # PR 9: leftovers are visible
     assert st.quanta > 0                       # progress before any finish
     assert st.tokens > 0
     assert st.n_preemptions > 0
