@@ -122,7 +122,11 @@ def write_mcts_trajectory(results: dict) -> str | None:
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "git_sha": _git_sha(),
         "backend": jax.default_backend(),
+        # both axes of the host: OS cores (what the paper's thread scaling
+        # is against) AND visible JAX devices (what shard_map scales over —
+        # 1 unless XLA_FLAGS forces virtual host devices)
         "host_cores": os.cpu_count(),
+        "n_devices": len(jax.devices()),
         "board": fig7["board"],
         "n_workers": fig7["n_workers"],
         "n_playouts": fig7["n_playouts"],
@@ -152,6 +156,14 @@ def write_mcts_trajectory(results: dict) -> str | None:
         # mixed hex+gomoku Poisson serving: move-latency percentiles,
         # playouts/s, and the zero-recompile ledger (see serve_games.py)
         payload["serving"] = results["serve_games"]["serving"]
+        # async retirement pipelining vs blocking on the same trace, with
+        # per-request bit-identity asserted in-run (DESIGN.md §18)
+        payload["pipeline"] = results["serve_games"]["pipeline"]
+    if "root_parallel" in results:
+        # shard_map forest scale-out point (subprocess workers on 1 and 8
+        # virtual host devices; see root_parallel.sharded_forest)
+        payload["sharded_forest"] = results["root_parallel"].get(
+            "sharded_forest")
     if "selfplay" in results:
         # cross-move tree reuse: warm vs cold move latency and the mean
         # visits-retained fraction over a self-play game (see selfplay.py)
@@ -202,8 +214,12 @@ def _summ(name: str, res: dict) -> dict:
         return {s: {t: round(p["speedup"], 2) for t, p in pts.items()}
                 for s, pts in res["curves"].items()}
     if name == "root_parallel":
-        return {f"E={e}": round(p["aggregate_speedup"], 2)
-                for e, p in res["ensemble"].items()}
+        out = {f"E={e}": round(p["aggregate_speedup"], 2)
+               for e, p in res["ensemble"].items()}
+        sf = res.get("sharded_forest") or {}
+        if "speedup_vs_single_device" in sf:
+            out["sharded_vs_1dev"] = round(sf["speedup_vs_single_device"], 2)
+        return out
     if name == "fig9_mapping":
         return {t: {k: round(v, 2) for k, v in o.items()}
                 for t, o in res["overlay"].items()}
@@ -228,7 +244,8 @@ def _summ(name: str, res: dict) -> dict:
                 "p50_vs_one_per_core": round(s["p50_vs_one_per_core"], 2),
                 "p95_vs_one_per_core": round(s["p95_vs_one_per_core"], 2),
                 "preemptions": s["preemptions"],
-                "recompiles": s["recompiles"]}
+                "recompiles": s["recompiles"],
+                "pipeline_speedup": round(res["pipeline"]["speedup"], 2)}
     if name == "serve_chaos":
         c = res["chaos"]
         return {"fault_rates": c["fault_rates"],

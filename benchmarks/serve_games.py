@@ -80,10 +80,10 @@ def run(n_requests: int = 16, slots: int = 2, grain: int = 2,
     trace = make_trace(n_requests, rate_rps, board_size, playout_choices,
                        seed)
 
-    def engine(policy="fifo", preempt=preempt_quanta):
+    def engine(policy="fifo", preempt=preempt_quanta, pipeline=None):
         return TPFIFOGameEngine(n_slots=slots, grain=grain, policy=policy,
                                 preempt_quanta=preempt, n_workers=n_workers,
-                                tree_cap=tree_cap)
+                                tree_cap=tree_cap, pipeline=pipeline)
 
     # compile off the clock: one tiny request per game class warms the one
     # quantum program each class ever gets
@@ -103,6 +103,27 @@ def run(n_requests: int = 16, slots: int = 2, grain: int = 2,
                                                   1e-9)
     p95_ratio = one_per_core["latency_p95"] / max(tpfifo["latency_p95"],
                                                   1e-9)
+
+    # pipelined vs blocking retirement (DESIGN.md §18): same trace, same
+    # answers — asserted bitwise per request — with throughput and
+    # host-blocked-on-device time compared side by side
+    eng_on, eng_off = engine(pipeline=True), engine(pipeline=False)
+    pipe_on = serve_trace(eng_on, trace)
+    pipe_off = serve_trace(eng_off, trace)
+    res_on = {r.rid: r.result for r in eng_on.finished}
+    res_off = {r.rid: r.result for r in eng_off.finished}
+    for rid, r in res_on.items():
+        assert (r["root_visits"] == res_off[rid]["root_visits"]).all()
+        assert r["best_move"] == res_off[rid]["best_move"]
+    pipeline = {
+        "pipelined_playouts_per_s": pipe_on["playouts_per_s"],
+        "blocking_playouts_per_s": pipe_off["playouts_per_s"],
+        "speedup": (pipe_on["playouts_per_s"]
+                    / max(pipe_off["playouts_per_s"], 1e-9)),
+        "pipelined_device_wait_s": pipe_on["device_wait_s"],
+        "blocking_device_wait_s": pipe_off["device_wait_s"],
+        "bit_identical": True,
+    }
     return {
         "config": {"n_requests": n_requests, "slots": slots, "grain": grain,
                    "n_workers": n_workers, "board_size": board_size,
@@ -112,6 +133,7 @@ def run(n_requests: int = 16, slots: int = 2, grain: int = 2,
                    "smoke": smoke},
         "tpfifo": tpfifo,
         "one_per_core": one_per_core,
+        "pipeline": pipeline,
         "serving": {
             "games": list(GAMES),
             "board": f"{board_size}x{board_size}",
@@ -149,6 +171,11 @@ def main():
     print(f"one_per_core / tpfifo latency: p50 {s['p50_vs_one_per_core']:.2f}x"
           f"  p95 {s['p95_vs_one_per_core']:.2f}x   "
           f"recompiles during serving: {s['recompiles']}")
+    pl = out["pipeline"]
+    print(f"pipelined vs blocking: {pl['speedup']:.2f}x playouts/s   "
+          f"device wait {pl['pipelined_device_wait_s']*1e3:.1f} / "
+          f"{pl['blocking_device_wait_s']*1e3:.1f} ms   bit-identical: "
+          f"{pl['bit_identical']}")
     path = save_result("serve_games", out)
     print("->", path)
 

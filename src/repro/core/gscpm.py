@@ -96,6 +96,12 @@ class GSCPMConfig:
     # game class compiles exactly two programs (metrics on / off), and the
     # search results are bit-identical either way (tests/test_obsv.py).
     metrics: bool = False
+    # root-parallel ensemble width when the config names a FOREST tenant
+    # class (repro.serve.games): the forest's leading axis is a program
+    # shape, so it is HASHED — each (game, E) pair is its own class with
+    # its own compiled quantum, and the default E=1 keeps every existing
+    # single-tree class key unchanged.
+    n_trees: int = 1
 
     @property
     def game_obj(self):

@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core import scheduler as sched
 from repro.core.gscpm import GSCPMConfig, fold_task_keys, sync_iteration
 from repro.core.tree import (
@@ -100,18 +101,101 @@ run_chunk_forest = jax.jit(_forest_chunk, static_argnames=("cfg",),
                            donate_argnums=(0,))
 
 
-def ensemble_sharding(n_trees: int):
-    """NamedSharding splitting the ensemble axis over devices (or None).
+def ensemble_mesh(devices=None):
+    """The 1-D ensemble mesh over all visible devices (None on one device).
+
+    Built through ``launch.mesh.make_ensemble_mesh`` — the same
+    ``compat.make_auto_mesh`` path as the LM production meshes, with the
+    ``"ens"`` axis the ``sharding/rules.py`` "ensemble" rule maps onto.
+    """
+    from repro.launch.mesh import make_ensemble_mesh
+
+    devices = list(jax.devices() if devices is None else devices)
+    if len(devices) <= 1:
+        return None
+    return make_ensemble_mesh(devices)
+
+
+def ensemble_spec(mesh):
+    """``P("ens")`` for the forest's leading member axis, derived through
+    the logical-axis rules rather than spelled by hand."""
+    from repro.sharding.rules import DEFAULT_RULES, logical_to_spec
+
+    return logical_to_spec(("ensemble",), DEFAULT_RULES, mesh)
+
+
+def ensemble_sharding(n_trees: int, mesh=None):
+    """(NamedSharding over the ensemble axis, padded member count).
 
     vmap batching is embarrassingly parallel, so placing the forest with its
     leading axis sharded lets XLA partition the whole chunk — the multi-chip
-    analogue of the paper's per-thread trees (DESIGN.md §3/§9).
+    analogue of the paper's per-thread trees (DESIGN.md §3/§9). Returns
+    ``(None, n_trees)`` with fewer than two devices. A member count that
+    does not divide the mesh is PADDED up to the next multiple (the second
+    return value) instead of the old silent fall-back to unsharded: pad
+    members only ever run under all-False ``active`` masks, which leaves
+    their trees bit-identical to init and their contribution to every merge
+    exactly zero, so real members match the unpadded, unsharded run bit for
+    bit (pinned in tests/test_forest_sharding.py).
     """
-    devices = jax.devices()
-    if len(devices) <= 1 or n_trees % len(devices) != 0:
-        return None
-    mesh = jax.sharding.Mesh(np.asarray(devices), ("ens",))
-    return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec("ens"))
+    mesh = ensemble_mesh() if mesh is None else mesh
+    if mesh is None:
+        return None, n_trees
+    n_dev = int(np.prod(mesh.devices.shape))
+    padded = ((n_trees + n_dev - 1) // n_dev) * n_dev
+    return jax.sharding.NamedSharding(mesh, ensemble_spec(mesh)), padded
+
+
+def pad_forest_members(forest: Tree, boards: jnp.ndarray, n_padded: int,
+                       cfg: GSCPMConfig, to_move) -> tuple[Tree, jnp.ndarray]:
+    """Append inert members until the ensemble axis has ``n_padded`` rows.
+
+    Pad members get fresh init trees and a copy of member 0's board; they
+    only ever run with all-False ``active`` masks, so they allocate nothing
+    and back up nothing. Callers slice results back to the real count.
+    """
+    extra = n_padded - forest_size(forest)
+    if extra <= 0:
+        return forest, boards
+    tm = int(np.asarray(to_move).reshape(-1)[0])
+    pad = init_forest(extra, cfg.tree_cap, cfg.game_obj.n_actions, tm)
+    forest = jax.tree.map(lambda a, b: jnp.concatenate([a, b]), forest, pad)
+    boards = jnp.concatenate([boards, jnp.tile(boards[:1], (extra, 1))])
+    return forest, boards
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "mesh"),
+                   donate_argnums=(0,))
+def _sharded_chunk(forest, boards, task_keys, active, m, cp, *, cfg, mesh):
+    """``shard_map``-partitioned forest chunk: each device runs the vmapped
+    per-round body (``_forest_chunk``, unchanged) on its own members with
+    ZERO collectives — ``sync_root_stats``, dispatched outside this
+    program, stays the only cross-shard exchange. Per-shard RNG is free:
+    ``task_keys`` ride in pre-folded and sharded along the ensemble axis,
+    so a member's stream is identical no matter which shard hosts it — the
+    bit-identity pin of tests/test_forest_sharding.py."""
+    spec, rep = ensemble_spec(mesh), jax.sharding.PartitionSpec()
+    body = compat.shard_map(
+        lambda f, b, k, a, mm, c: _forest_chunk(f, b, cfg, k, a, mm, c),
+        mesh=mesh, in_specs=(spec, spec, spec, spec, rep, rep),
+        out_specs=spec)
+    return body(forest, boards, task_keys, active, m, cp)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "mesh"),
+                   donate_argnums=(0,))
+def _sharded_chunk_metrics(forest, boards, task_keys, active, m, cp, metrics,
+                           *, cfg, mesh):
+    """``_sharded_chunk`` with the (E,)-leaf ``SearchMetrics`` accumulator
+    riding the same ensemble sharding (pad members see only masked-out
+    work; callers slice summaries to the real members)."""
+    spec, rep = ensemble_spec(mesh), jax.sharding.PartitionSpec()
+    body = compat.shard_map(
+        lambda f, b, k, a, mm, c, mx: _forest_chunk(
+            f, b, cfg, k, a, mm, c, mx),
+        mesh=mesh, in_specs=(spec, spec, spec, spec, rep, rep, spec),
+        out_specs=(spec, spec))
+    return body(forest, boards, task_keys, active, m, cp, metrics)
 
 
 @jax.jit
@@ -121,6 +205,41 @@ def fold_member_task_keys(member_keys: jax.Array,
     (jitted so per-round key building is dispatch-only)."""
     return jax.vmap(lambda mk: jax.vmap(
         lambda t: jax.random.fold_in(mk, t))(task_ids))(member_keys)
+
+
+def run_schedule_round_forest(forest: Tree, boards: jnp.ndarray,
+                              cfg: GSCPMConfig, member_keys: jax.Array,
+                              rnd: sched.Round, cp, metrics=None, *,
+                              n_real: int | None = None, mesh=None):
+    """Forest twin of ``gscpm.run_schedule_round``: one schedule ``Round``
+    for all E members in ONE dispatch — the atomic quantum unit shared by
+    the batch driver (``gscpm_search_batch``) and the serving engine
+    (``repro.serve.games`` forest tenants), which makes the serving-
+    equivalence argument structural: both call the same function with the
+    same operands. Round RNG depends only on (member key, task id,
+    iteration), never on sharding, padding, or wall-clock interleaving.
+
+    ``n_real`` masks sharding pad members (rows ``>= n_real`` run with
+    all-False ``active`` — bitwise inert); ``mesh`` dispatches the
+    ``shard_map``-partitioned chunk instead of the single-device one.
+    With ``cfg.metrics`` returns ``(forest, metrics)``.
+    """
+    Ep = forest_size(forest)
+    task_keys = fold_member_task_keys(
+        member_keys, jnp.asarray(rnd.task_ids, dtype=jnp.int32))
+    act = np.tile(np.asarray(rnd.active)[None, :], (Ep, 1))
+    if n_real is not None and n_real < Ep:
+        act[n_real:] = False
+    active = jnp.asarray(act)
+    m = jnp.asarray(rnd.m, dtype=jnp.int32)
+    if mesh is not None:
+        if cfg.metrics:
+            return _sharded_chunk_metrics(forest, boards, task_keys, active,
+                                          m, cp, metrics, cfg=cfg, mesh=mesh)
+        return _sharded_chunk(forest, boards, task_keys, active, m, cp,
+                              cfg=cfg, mesh=mesh)
+    return run_chunk_forest(forest, boards, cfg, task_keys, active, m, cp,
+                            metrics)
 
 
 # ----------------------------------------------------------------- merges ----
@@ -155,6 +274,59 @@ def forest_summary(forest: Tree, n_moves: int) -> dict[str, jnp.ndarray]:
         "member_root_values": jax.vmap(root_value)(forest),
         "best_move_sum": jnp.argmax(visits).astype(jnp.int32),
         "best_move_vote": majority_vote_move(forest, n_moves),
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("n_moves",))
+def forest_retire_summary(forest: Tree, n_moves: int) -> dict:
+    """Device-side merged root snapshot of a forest in ONE jitted program.
+
+    The forest twin of ``tree.root_summary_device``: the pipelined serving
+    engine dispatches this at retirement detection (async) and materializes
+    the result a tick later, so the readback overlaps the next tick's
+    quanta (DESIGN.md §18). Merged ``best_move`` follows the single-tree
+    contract: ``-1`` when no member has expanded a root child yet.
+    """
+    visits, wins = merged_root_stats(forest, n_moves)
+    rv = forest.visits[:, 0].sum()
+    rw = forest.wins[:, 0].sum()
+    return {
+        "root_visits": visits,
+        "root_wins": wins,
+        "best_move": jnp.where(visits.sum() > 0, jnp.argmax(visits),
+                               -1).astype(jnp.int32),
+        "best_move_vote": majority_vote_move(forest, n_moves),
+        "member_best_moves": jax.vmap(best_child)(forest),
+        "root_value": jnp.where(rv > 0, rw / jnp.maximum(rv, 1.0), 0.0),
+        "tree_nodes": forest.n_nodes.sum(),
+    }
+
+
+def forest_root_summary(forest: Tree, n_moves: int,
+                        n_real: int | None = None) -> dict:
+    """Host-side merged root snapshot — the retire currency of forest
+    tenants (``repro.serve.games``), shaped like ``core/tree.root_summary``
+    so the result guard and clients read both identically, plus ensemble
+    extras (vote move, per-member best moves). ``n_real`` slices off
+    sharding pad members first."""
+    if n_real is not None and n_real < forest_size(forest):
+        forest = jax.tree.map(lambda x: x[:n_real], forest)
+    dev = jax.device_get(forest_retire_summary(forest, n_moves))
+    return materialize_forest_summary(dev, forest_size(forest))
+
+
+def materialize_forest_summary(dev: dict, n_trees: int) -> dict:
+    """Pull a ``forest_retire_summary`` device dict to plain host types
+    (split out so the pipelined engine can defer exactly this step)."""
+    return {
+        "root_visits": np.asarray(dev["root_visits"]),
+        "root_wins": np.asarray(dev["root_wins"]),
+        "best_move": int(dev["best_move"]),
+        "root_value": float(dev["root_value"]),
+        "tree_nodes": int(dev["tree_nodes"]),
+        "n_trees": n_trees,
+        "best_move_vote": int(dev["best_move_vote"]),
+        "member_best_moves": np.asarray(dev["member_best_moves"]).tolist(),
     }
 
 
@@ -229,6 +401,7 @@ def sync_root_stats(forest: Tree, state: RootSyncState, n_moves: int
 def gscpm_search_batch(boards: jnp.ndarray, to_move, cfg: GSCPMConfig,
                        key: jax.Array, *, n_trees: int | None = None,
                        merge_every: int = 0, forest: Tree | None = None,
+                       shard: str = "auto",
                        tracer=None) -> tuple[Tree, dict[str, Any]]:
     """Root-parallel GSCPM over E trees in one jitted program per round.
 
@@ -243,11 +416,21 @@ def gscpm_search_batch(boards: jnp.ndarray, to_move, cfg: GSCPMConfig,
     the schedule stays exactly ``cfg``'s and the forest's buffers are
     donated to the first chunk.
 
-    Per-round work is ONE dispatch of ``run_chunk_forest`` — no per-tree
-    Python loop; with multiple devices the ensemble axis is sharded.
-    ``cfg.metrics`` adds a whole-ensemble ``stats["metrics"]`` summary;
-    ``tracer`` records per-round ``gscpm_round`` spans (blocking per round,
-    a profiling mode — see ``gscpm.gscpm_search``).
+    Per-round work is ONE dispatch of ``run_schedule_round_forest`` — no
+    per-tree Python loop. ``shard`` controls the multi-device path:
+    ``"auto"`` partitions the ensemble axis over the ``shard_map`` forest
+    step whenever more than one device is visible (padding E up to the
+    device count when it does not divide — pad members are bitwise inert),
+    ``"off"`` forces the single-device dispatch, ``"require"`` raises
+    unless a real mesh is available (CI uses it to assert the sharded path
+    actually ran sharded). The sharded search is bit-identical to the
+    unsharded one: per-member RNG and compute never depend on placement,
+    and the only cross-shard exchange is ``sync_root_stats``' exact
+    delta-tracked merge, whose integer/half-integer float32 sums are
+    order-independent. ``cfg.metrics`` adds a whole-ensemble
+    ``stats["metrics"]`` summary; ``tracer`` records per-round
+    ``gscpm_round`` spans (blocking per round, a profiling mode — see
+    ``gscpm.gscpm_search``).
     """
     boards = jnp.asarray(boards)
     if boards.ndim == 1:
@@ -257,6 +440,9 @@ def gscpm_search_batch(boards: jnp.ndarray, to_move, cfg: GSCPMConfig,
     E = boards.shape[0]
     if n_trees is not None and n_trees != E:
         raise ValueError(f"n_trees={n_trees} != boards.shape[0]={E}")
+    if shard not in ("auto", "off", "require"):
+        raise ValueError(f"shard must be 'auto'|'off'|'require', "
+                         f"got {shard!r}")
     n_moves = cfg.game_obj.n_actions  # the Game seam's move-id space
 
     reused_nodes = 0
@@ -271,20 +457,33 @@ def gscpm_search_batch(boards: jnp.ndarray, to_move, cfg: GSCPMConfig,
         tm = int(np.asarray(to_move).reshape(-1)[0])
         warm_tree_check(forest, tm, cfg)
         reused_nodes = int(np.asarray(forest.n_nodes).sum()) - E
-    member_keys = fold_task_keys(key, jnp.arange(E, dtype=jnp.int32))
-    sharding = ensemble_sharding(E)
-    if sharding is not None:
+    mesh = ensemble_mesh() if shard != "off" else None
+    if shard == "require" and mesh is None:
+        raise RuntimeError(
+            "shard='require' but fewer than two devices are visible — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8 BEFORE "
+            "importing jax (README 'Scaling out')")
+    padded_members = 0
+    Ep = E
+    if mesh is not None:
+        sharding, Ep = ensemble_sharding(E, mesh)
+        padded_members = Ep - E
+        forest, boards = pad_forest_members(forest, boards, Ep, cfg, to_move)
+        member_keys = fold_task_keys(key, jnp.arange(Ep, dtype=jnp.int32))
         forest, boards, member_keys = jax.device_put(
             (forest, boards, member_keys), sharding)
+    else:
+        member_keys = fold_task_keys(key, jnp.arange(E, dtype=jnp.int32))
     schedule = sched.make_schedule(
         cfg.n_playouts, cfg.n_tasks, cfg.n_workers, cfg.scheduler)
-    state = init_sync_state(E, n_moves) if merge_every > 0 else None
+    state = init_sync_state(Ep, n_moves) if merge_every > 0 else None
     metrics = None
     if cfg.metrics:
         from repro.obsv.search_metrics import init_search_metrics_forest
-        metrics = init_search_metrics_forest(E)
+        metrics = init_search_metrics_forest(Ep)
         if reused_nodes:
-            # per-member retention gauge (summed in the ensemble summary)
+            # per-member retention gauge (summed in the ensemble summary;
+            # pad members report 0 — their forests are fresh inits)
             metrics = metrics._replace(
                 tree_nodes_reused=(forest.n_nodes - 1).astype(jnp.int32))
 
@@ -293,18 +492,15 @@ def gscpm_search_batch(boards: jnp.ndarray, to_move, cfg: GSCPMConfig,
     playouts_per_tree = 0
     n_syncs = 0
     for r, rnd in enumerate(schedule):
-        task_keys = fold_member_task_keys(
-            member_keys, jnp.asarray(rnd.task_ids, dtype=jnp.int32))
-        active = jnp.tile(jnp.asarray(rnd.active)[None, :], (E, 1))
         span_args = {"rounds": 1, "iterations": int(rnd.m),
                      "lane_iterations": E * int(rnd.active.sum()) * rnd.m,
                      "tasks": E * int(rnd.active.sum()),
                      "workers": E * cfg.n_workers, "game": cfg.game}
         with (tracer.span("gscpm_round", span_args) if tracer
               else contextlib.nullcontext()):
-            out = run_chunk_forest(forest, boards, cfg, task_keys, active,
-                                   jnp.asarray(rnd.m, dtype=jnp.int32), cp,
-                                   metrics)
+            out = run_schedule_round_forest(forest, boards, cfg, member_keys,
+                                            rnd, cp, metrics, n_real=E,
+                                            mesh=mesh)
             forest, metrics = out if cfg.metrics else (out, metrics)
             if tracer:
                 jax.block_until_ready(forest.visits)
@@ -316,6 +512,10 @@ def gscpm_search_batch(boards: jnp.ndarray, to_move, cfg: GSCPMConfig,
     jax.block_until_ready(forest.visits)
     dt = time.perf_counter() - t0
 
+    if padded_members:
+        forest = jax.tree.map(lambda x: x[:E], forest)
+        if cfg.metrics:
+            metrics = jax.tree.map(lambda x: x[:E], metrics)
     playouts = E * playouts_per_tree
     summary = jax.device_get(forest_summary(forest, n_moves))
     stats = {
@@ -327,7 +527,13 @@ def gscpm_search_batch(boards: jnp.ndarray, to_move, cfg: GSCPMConfig,
         "rounds": len(schedule),
         "grain": cfg.grain,
         "n_syncs": n_syncs,
-        "sharded": sharding is not None,
+        "sharded": mesh is not None,
+        "n_devices": (1 if mesh is None
+                      else int(np.prod(mesh.devices.shape))),
+        "mesh_shape": (None if mesh is None
+                       else dict(zip(mesh.axis_names,
+                                     (int(d) for d in mesh.devices.shape)))),
+        "padded_members": padded_members,
         "tree_nodes": [int(n) for n in np.asarray(forest.n_nodes)],
         "member_best_moves": summary["member_best_moves"].tolist(),
         "member_root_values": summary["member_root_values"].tolist(),

@@ -232,6 +232,38 @@ def root_summary(tree: Tree, n_moves: int,
     return out
 
 
+@functools.partial(jax.jit, static_argnames=("n_moves",))
+def root_summary_device(tree: Tree, n_moves: int) -> dict:
+    """Device-side twin of ``root_summary``: the same reductions as ONE
+    async-dispatched jitted program, nothing pulled to host.
+
+    The pipelined serving engine (``repro.serve.games``, DESIGN.md §18)
+    dispatches this when it detects retirement and materializes the result
+    a tick later, so the host readback overlaps the next tick's quanta
+    instead of stalling the whole pool on one finished search.
+    """
+    visits, wins = root_move_stats(tree, n_moves)
+    return {"root_visits": visits, "root_wins": wins,
+            "best_move": best_child(tree), "root_value": root_value(tree),
+            "tree_nodes": tree.n_nodes}
+
+
+def materialize_root_summary(dev: dict,
+                             reused_visits: int | None = None) -> dict:
+    """Pull a ``root_summary_device`` dict to the exact host types
+    ``root_summary`` ships — the deferred half of the pipelined retire."""
+    out = {
+        "root_visits": np.asarray(dev["root_visits"]),
+        "root_wins": np.asarray(dev["root_wins"]),
+        "best_move": int(dev["best_move"]),
+        "root_value": float(dev["root_value"]),
+        "tree_nodes": int(dev["tree_nodes"]),
+    }
+    if reused_visits is not None:
+        out["reused_visits"] = int(reused_visits)
+    return out
+
+
 # -------------------------------------------------------------- re-rooting ----
 def _reroot_impl(tree: Tree, move: jnp.ndarray, new_cap: int) -> Tree:
     """Traced body of ``reroot_tree`` (see its docstring for the contract).

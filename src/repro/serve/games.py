@@ -49,8 +49,16 @@ import numpy as np
 
 from repro.core import game as game_mod
 from repro.core import scheduler as sched
-from repro.core.gscpm import GSCPMConfig, run_schedule_round, warm_tree_check
-from repro.core.tree import Tree, init_tree, reroot_tree, root_summary
+from repro.core.gscpm import (GSCPMConfig, fold_task_keys,
+                              run_schedule_round, warm_tree_check)
+from repro.core.root_parallel import (ensemble_mesh, ensemble_sharding,
+                                      forest_retire_summary,
+                                      materialize_forest_summary,
+                                      pad_forest_members,
+                                      run_schedule_round_forest)
+from repro.core.tree import (Tree, init_forest, init_tree,
+                             materialize_root_summary, reroot_tree,
+                             root_summary_device)
 from repro.serve import resilience
 from repro.serve.resilience import InjectedFaultError, ResultGuardError
 from repro.serve.tpfifo import Ticket, TPFIFODriver
@@ -80,6 +88,14 @@ class GameRequest:
     seed: int = 0
     deadline_s: float | None = None
     board: Any = None
+    # root-parallel ensemble width: E > 1 serves the request as a FOREST
+    # tenant — E independent trees on the request's position, advanced by
+    # one dispatch per round (sharded over the ensemble mesh when more
+    # than one device is visible) and retired with merged root stats
+    # (``root_parallel.forest_root_summary``). ``n_playouts`` is the
+    # PER-MEMBER budget; ``result["playouts"]`` reports the ensemble
+    # total. Forest requests are stateless (no ``session``).
+    n_trees: int = 1
     # the stateful tenant this request belongs to (``GameSession``): the
     # session's device-resident tree warm-starts the search and the final
     # tree is handed back at retirement. None = the classic stateless
@@ -115,6 +131,14 @@ class _SearchState:
     reused_nodes: int = 0           # warm-start inheritance (beyond the root)
     reused_visits: float = 0.0      # root evidence the search started from
     snap: Any = None                # last committed SearchSnapshot (chaos)
+    # forest tenants (n_trees > 1): ``tree`` is an E-member forest (padded
+    # to ``n_padded`` rows when the ensemble mesh does not divide E),
+    # ``board`` is the (n_padded, n_cells) tiled position, and rounds
+    # dispatch ``run_schedule_round_forest`` with these member streams
+    n_trees: int = 1
+    n_padded: int = 1
+    member_keys: Any = None         # (n_padded,) typed member key streams
+    mesh: Any = None                # ensemble mesh (None on one device)
 
 
 def warm_budget(n_playouts: int, n_tasks: int, n_workers: int,
@@ -170,6 +194,7 @@ class TPFIFOGameEngine(TPFIFODriver):
                  quarantine_after: int | None = None,
                  injector=None, retry_backoff: tuple[int, int] = (1, 8),
                  guard: bool = True, snapshots: bool | None = None,
+                 pipeline: bool | None = None,
                  tracer=None, registry=None):
         super().__init__(n_slots, grain=grain, policy=policy,
                          preempt_quanta=preempt_quanta,
@@ -184,6 +209,21 @@ class TPFIFOGameEngine(TPFIFODriver):
         self.guard = guard
         self._snapshots = (injector is not None) if snapshots is None \
             else bool(snapshots)
+        # async round pipelining (DESIGN.md §18): a finished search frees
+        # its slot immediately and its retirement readback is deferred one
+        # tick, so the host materializes it WHILE the device runs the next
+        # tick's quanta — no device readback on the hot tick path at all.
+        # Pipelining needs that path sync-free, so it disables cleanly
+        # whenever something must block per quantum: a tracer (honest span
+        # durations), a fault injector, or snapshot commit points. The
+        # served results are bit-identical either way (pinned in
+        # tests/test_pipeline.py); ``self.pipeline`` reports the EFFECTIVE
+        # mode.
+        want = True if pipeline is None else bool(pipeline)
+        self.pipeline = (want and tracer is None and injector is None
+                         and not self._snapshots)
+        # deferred retirements: (class, slot, ticket, state, device summary)
+        self._pending_retire: list[tuple] = []
         self.slots_per_class = n_slots
         self.template = GSCPMConfig(
             n_workers=n_workers, vl_rounds=vl_rounds, tree_cap=tree_cap,
@@ -213,7 +253,8 @@ class TPFIFOGameEngine(TPFIFODriver):
         """
         return dataclasses.replace(
             self.template, game=req.game, board_size=req.board_size,
-            n_playouts=req.n_playouts, n_tasks=req.n_tasks, cp=req.cp)
+            n_playouts=req.n_playouts, n_tasks=req.n_tasks, cp=req.cp,
+            n_trees=getattr(req, "n_trees", 1))
 
     def _sync_active(self) -> None:
         self.active = [t for pool in self.pools.values() for t in pool]
@@ -241,6 +282,16 @@ class TPFIFOGameEngine(TPFIFODriver):
                 f"n_tasks must be a positive int, got {req.n_tasks!r}")
         if req.to_move not in (1, 2):
             raise ValueError(f"to_move must be 1 or 2, got {req.to_move!r}")
+        n_trees = getattr(req, "n_trees", 1)
+        if isinstance(n_trees, bool) or not isinstance(
+                n_trees, (int, np.integer)) or n_trees < 1:
+            raise ValueError(
+                f"n_trees must be a positive int, got {n_trees!r}")
+        if n_trees > 1 and req.session is not None:
+            raise ValueError(
+                "forest requests (n_trees > 1) are stateless: sessions "
+                "re-root ONE tree across moves (use reroot_forest + "
+                "gscpm_search_batch(forest=...) for warm forests)")
         try:
             cp = float(req.cp)
         except (TypeError, ValueError):
@@ -326,8 +377,9 @@ class TPFIFOGameEngine(TPFIFODriver):
                     # round-0 commit point: a fault before the first
                     # quantum completes rolls back HERE (preserving a warm
                     # session tree) instead of rebuilding from scratch
-                    st.snap = resilience.snapshot_search(
-                        st.tree, st.metrics, 0, 0, len(t.req.out))
+                    with self._device_wait("snapshot", rid=t.req.rid):
+                        st.snap = resilience.snapshot_search(
+                            st.tree, st.metrics, 0, 0, len(t.req.out))
                 self._states[t.req.rid] = st
             if t.t_admit is None:
                 t.t_admit = self._now()
@@ -358,6 +410,8 @@ class TPFIFOGameEngine(TPFIFODriver):
         game = cfg.game_obj
         board = (game.init_board() if req.board is None
                  else jnp.asarray(req.board, jnp.int8))
+        if cfg.n_trees > 1:
+            return self._make_forest_state(cfg, t, board)
         # warm start: a session-backed request checks its tenant's
         # device-resident tree out of the session (ownership moves to the
         # engine until retirement) and shrinks the budget by the evidence
@@ -396,38 +450,101 @@ class TPFIFOGameEngine(TPFIFODriver):
             metrics=metrics, session=sess,
             reused_nodes=reused_nodes, reused_visits=reused_visits)
 
+    def _make_forest_state(self, cfg: GSCPMConfig, t: Ticket,
+                           board: jnp.ndarray) -> _SearchState:
+        """State for a forest tenant: E member trees on one position,
+        ensemble axis sharded over the device mesh when one exists
+        (padded to the device count with bitwise-inert members — see
+        ``root_parallel.ensemble_sharding``). Per-member RNG streams are
+        the ``gscpm_search_batch`` folding of the request seed, so a
+        quantum-served forest is bit-identical to the uninterrupted batch
+        search (tests/test_forest_serving equivalence)."""
+        req = t.req
+        E = cfg.n_trees
+        mesh = ensemble_mesh()
+        sharding, Ep = ensemble_sharding(E, mesh)
+        forest = init_forest(E, cfg.tree_cap, cfg.game_obj.n_actions,
+                             req.to_move)
+        boards = jnp.tile(board[None, :], (E, 1))
+        forest, boards = pad_forest_members(forest, boards, Ep, cfg,
+                                            req.to_move)
+        member_keys = fold_task_keys(jax.random.key(req.seed),
+                                     jnp.arange(Ep, dtype=jnp.int32))
+        if sharding is not None:
+            forest, boards, member_keys = jax.device_put(
+                (forest, boards, member_keys), sharding)
+        metrics = None
+        if cfg.metrics:
+            from repro.obsv.search_metrics import init_search_metrics_forest
+            metrics = init_search_metrics_forest(Ep)
+        return _SearchState(
+            cfg=cfg, board=boards, key=jax.random.key(req.seed),
+            cp=jnp.asarray(cfg.cp, jnp.float32),
+            schedule=sched.make_schedule(cfg.n_playouts, cfg.n_tasks,
+                                         cfg.n_workers, cfg.scheduler),
+            tree=forest,
+            deadline=(None if req.deadline_s is None
+                      else t.t_submit + req.deadline_s),
+            metrics=metrics, n_trees=E, n_padded=Ep,
+            member_keys=member_keys, mesh=mesh)
+
     # -- tick -------------------------------------------------------------
     def step(self) -> int:
+        """One engine tick, double-buffered when ``self.pipeline``.
+
+        The hot path — admission, quantum planning, round dispatch,
+        retirement DETECTION (``round_idx``/``schedule`` are host state) —
+        touches no device buffer. Retirements deferred by EARLIER ticks are
+        materialized last, after this tick's quanta are already in flight,
+        so their host readbacks overlap the device work instead of
+        serializing with it (DESIGN.md §18). With pipelining off, ``ready``
+        is always empty and ``_retire`` blocks inline as before.
+        """
+        ready, self._pending_retire = self._pending_retire, []
         self._admit_free_slots()
         live = [(ck, s, t) for ck, pool in self.pools.items()
                 for s, t in enumerate(pool) if t is not None]
-        if not live:
-            return 0
-        m = self._tick_m()
-        failed: set = set()
-        for ck, s, t in live:
-            # fault containment boundary: a quantum that raises (injected
-            # dispatch error, device loss, anything) is contained to ITS
-            # slot — the search rolls back to its last committed snapshot
-            # and requeues with backoff, the slot takes a quarantine
-            # strike, and every other slot's quantum still runs
-            try:
-                self._run_slot(t, m, slot_key=(ck, s))
-            except Exception as err:   # noqa: BLE001 — containment seam
-                self._fail_slot(ck, s, t, err)
-                failed.add(t.req.rid)
-            else:
-                self._note_slot_ok((ck, s))
-        for ck, s, t in live:
-            if t.req.rid in failed:
-                continue
-            st = self._states[t.req.rid]
-            if st.expired or st.round_idx >= len(st.schedule):
-                self._retire(ck, s, t)
-            elif self._should_preempt(t):
-                self._preempt(ck, s, t)
-        self._sync_active()
+        if live:
+            m = self._tick_m()
+            failed: set = set()
+            for ck, s, t in live:
+                # fault containment boundary: a quantum that raises
+                # (injected dispatch error, device loss, anything) is
+                # contained to ITS slot — the search rolls back to its last
+                # committed snapshot and requeues with backoff, the slot
+                # takes a quarantine strike, and every other slot's quantum
+                # still runs
+                try:
+                    self._run_slot(t, m, slot_key=(ck, s))
+                except Exception as err:  # noqa: BLE001 — containment seam
+                    self._fail_slot(ck, s, t, err)
+                    failed.add(t.req.rid)
+                else:
+                    self._note_slot_ok((ck, s))
+            for ck, s, t in live:
+                if t.req.rid in failed:
+                    continue
+                st = self._states[t.req.rid]
+                if st.expired or st.round_idx >= len(st.schedule):
+                    self._retire(ck, s, t)
+                elif self._should_preempt(t):
+                    self._preempt(ck, s, t)
+            self._sync_active()
+        for ck, s, t, st, dev in ready:
+            with self._device_wait("retire_summary", rid=t.req.rid):
+                self._materialize_retirement(ck, s, t, st, dev)
         return len(live)
+
+    def has_work(self) -> bool:
+        # deferred retirements are still work: run() must not exit (and
+        # run_trace must not sleep past) requests awaiting materialization
+        return bool(self._pending_retire) or super().has_work()
+
+    def _is_pending(self, rid) -> bool:
+        # a deferred retirement still owns its rid: a duplicate submitted
+        # inside the one-tick materialization window must not double-serve
+        return (super()._is_pending(rid)
+                or any(p[2].req.rid == rid for p in self._pending_retire))
 
     def _flat_slot(self, slot_key: tuple[GSCPMConfig, int]) -> int:
         """Flatten a (class, slot) key to the injector's slot index space
@@ -474,7 +591,21 @@ class TPFIFOGameEngine(TPFIFODriver):
                             "searches retired on deadline").inc()
                     break
                 rnd = st.schedule[st.round_idx]
-                if st.cfg.metrics:
+                if st.n_trees > 1:
+                    # root-parallel forest tenant: every member runs the
+                    # SAME Round under its own folded key stream (pad
+                    # members run all-inactive), sharded over the ensemble
+                    # mesh when one exists
+                    if st.cfg.metrics:
+                        st.tree, st.metrics = run_schedule_round_forest(
+                            st.tree, st.board, st.cfg, st.member_keys, rnd,
+                            st.cp, st.metrics, n_real=st.n_trees,
+                            mesh=st.mesh)
+                    else:
+                        st.tree = run_schedule_round_forest(
+                            st.tree, st.board, st.cfg, st.member_keys, rnd,
+                            st.cp, n_real=st.n_trees, mesh=st.mesh)
+                elif st.cfg.metrics:
                     st.tree, st.metrics = run_schedule_round(
                         st.tree, st.board, st.cfg, st.key, rnd, st.cp,
                         st.metrics)
@@ -482,7 +613,9 @@ class TPFIFOGameEngine(TPFIFODriver):
                     st.tree = run_schedule_round(st.tree, st.board, st.cfg,
                                                  st.key, rnd, st.cp)
                 st.round_idx += 1
-                st.playouts += int(rnd.active.sum()) * rnd.m
+                # a forest request's budget is per member; the conservation
+                # guard checks the ENSEMBLE total, so count all members
+                st.playouts += st.n_trees * int(rnd.active.sum()) * rnd.m
                 t.req.out.append(st.round_idx)   # committed progress
                 if span_args is not None:
                     span_args["rounds"] += 1
@@ -490,7 +623,8 @@ class TPFIFOGameEngine(TPFIFODriver):
                     span_args["lane_iterations"] += (
                         int(rnd.active.sum()) * rnd.m)
             if self.tracer and span_args["rounds"] > 0:
-                jax.block_until_ready(st.tree.visits)
+                with self._device_wait("quantum_sync", rid=t.req.rid):
+                    jax.block_until_ready(st.tree.visits)
         # commit point: snapshot the post-quantum state to the host, THEN
         # apply any planned poison — a later guard rejection rolls back to
         # here and replays the remaining rounds bit-identically. A dirty
@@ -499,9 +633,10 @@ class TPFIFOGameEngine(TPFIFODriver):
         # NOT overwrite the last good commit point: rolling back into the
         # corruption would retry forever.
         if self._snapshots:
-            snap = resilience.snapshot_search(
-                st.tree, st.metrics, st.round_idx, st.playouts,
-                len(t.req.out))
+            with self._device_wait("snapshot", rid=t.req.rid):
+                snap = resilience.snapshot_search(
+                    st.tree, st.metrics, st.round_idx, st.playouts,
+                    len(t.req.out))
             if resilience.snapshot_is_clean(snap):
                 st.snap = snap
         if self.injector is not None and slot_key is not None:
@@ -512,15 +647,49 @@ class TPFIFOGameEngine(TPFIFODriver):
 
     # -- slot lifecycle ---------------------------------------------------
     def _retire(self, ck: GSCPMConfig, s: int, t: Ticket) -> None:
+        """Dispatch the retirement summary on device; pull it NOW (blocking
+        mode) or a tick later (``self.pipeline``), freeing the slot
+        immediately so admission refills it while the readback is still in
+        flight (DESIGN.md §18)."""
         st = self._states[t.req.rid]
-        with (self.tracer.span("device_sync", {"rid": t.req.rid})
-              if self.tracer else contextlib.nullcontext()):
-            jax.block_until_ready(st.tree.visits)
+        n_moves = st.cfg.game_obj.n_actions
+        if self.tracer:
+            # tracer implies pipelining is off: block here so the trace
+            # attributes the retirement device sync honestly (§15)
+            with self.tracer.span("device_sync", {"rid": t.req.rid}):
+                with self._device_wait("device_sync", rid=t.req.rid):
+                    jax.block_until_ready(st.tree.visits)
+        if st.n_trees > 1:
+            forest = st.tree
+            if st.n_padded > st.n_trees:
+                # sharding pads never ran a playout; slice them off so the
+                # merge, vote, and node count see only real members
+                forest = jax.tree.map(lambda x: x[:st.n_trees], forest)
+            dev = forest_retire_summary(forest, n_moves)
+        else:
+            dev = root_summary_device(st.tree, n_moves)
+        if self.pipeline:
+            self._states.pop(t.req.rid)
+            self.pools[ck][s] = None
+            self._pending_retire.append((ck, s, t, st, dev))
+            return
+        with self._device_wait("retire_summary", rid=t.req.rid):
+            self._materialize_retirement(ck, s, t, st, dev)
+
+    def _materialize_retirement(self, ck: GSCPMConfig, s: int, t: Ticket,
+                                st: _SearchState, dev: dict) -> None:
+        """Pull a dispatched retirement summary to the host, run the result
+        guard, and finalize the request. In blocking mode the search is
+        still registered and the slot still held; in pipelined mode both
+        were released at detection, so failure takes the deferred path."""
+        deferred = t.req.rid not in self._states
         warm = st.session is not None or st.reused_nodes \
             or st.reused_visits > 0
-        res = root_summary(
-            st.tree, st.cfg.game_obj.n_actions,
-            reused_visits=int(st.reused_visits) if warm else None)
+        if st.n_trees > 1:
+            res = materialize_forest_summary(dev, st.n_trees)
+        else:
+            res = materialize_root_summary(
+                dev, reused_visits=int(st.reused_visits) if warm else None)
         if self.guard:
             # host-side result guard (DESIGN.md §17): a corrupted answer
             # never ships — it becomes a retry from the last committed
@@ -537,9 +706,14 @@ class TPFIFOGameEngine(TPFIFODriver):
                         "serve_guard_failures_total",
                         "retired answers rejected by the result "
                         "guard").inc()
-                self._fail_slot(ck, s, t, ResultGuardError("; ".join(bad)))
+                err = ResultGuardError("; ".join(bad))
+                if deferred:
+                    self._fail_deferred(ck, s, t, err)
+                else:
+                    self._fail_slot(ck, s, t, err)
                 return
-        self._states.pop(t.req.rid)
+        if not deferred:
+            self._states.pop(t.req.rid)
         t.t_done = self._now()
         res.update(
             game=st.cfg.game, board_size=st.cfg.board_size,
@@ -553,8 +727,14 @@ class TPFIFOGameEngine(TPFIFODriver):
             res["reused_nodes"] = st.reused_nodes
         if st.cfg.metrics:
             from repro.obsv.search_metrics import summarize_metrics
-            res["metrics"] = summarize_metrics(st.metrics)
-        self.pools[ck][s] = None
+            mm = st.metrics
+            if st.n_padded > st.n_trees:
+                mm = jax.tree.map(lambda x: x[:st.n_trees], mm)
+            res["metrics"] = summarize_metrics(mm)
+        if self.pools[ck][s] is t:
+            # blocking mode still holds the slot; a deferred retirement
+            # freed it at detection and it may already host a new search
+            self.pools[ck][s] = None
         t.req.result = res
         t.req.done = True
         if st.session is not None:
@@ -627,6 +807,21 @@ class TPFIFOGameEngine(TPFIFODriver):
             del t.req.out[:]
             self._states[t.req.rid] = self._make_state(
                 self.request_cfg(t.req), t)
+        self._requeue_for_retry(t, err)
+        self._note_slot_failure((ck, s))
+        self._sync_active()
+
+    def _fail_deferred(self, ck: GSCPMConfig, s: int, t: Ticket,
+                       err: Exception) -> None:
+        """Guard rejection surfacing a tick AFTER the slot was freed: the
+        search state was popped at detection and the slot may already host
+        a new search, so only the ticket rolls back — a cold rebuild from
+        round 0 (pipelining and snapshot discipline are mutually exclusive,
+        so there is never a commit point to restore) plus a quarantine
+        strike against the slot that produced the bad answer."""
+        del t.req.out[:]
+        self._states[t.req.rid] = self._make_state(
+            self.request_cfg(t.req), t)
         self._requeue_for_retry(t, err)
         self._note_slot_failure((ck, s))
         self._sync_active()

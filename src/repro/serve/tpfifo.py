@@ -45,6 +45,7 @@ resumes bit-identically.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import functools
 import math
@@ -111,10 +112,16 @@ class QueueStats:
     n_shed: int = 0
     n_quarantined: int = 0
     n_unfinished: int = 0
+    # host seconds spent BLOCKED on device readback (snapshots, retirement
+    # summaries, lane-state pulls) across the whole run — the async-
+    # pipelining currency (DESIGN.md §18): the pipelined engine hides this
+    # time under the next tick's device work, the blocking one eats it
+    device_wait_s: float = 0.0
 
     @classmethod
     def from_tickets(cls, tickets: list[Ticket], *, n_shed: int = 0,
-                     n_quarantined: int = 0) -> "QueueStats":
+                     n_quarantined: int = 0,
+                     device_wait_s: float = 0.0) -> "QueueStats":
         # progress accounting covers ALL tickets — a run that preempted
         # requests but finished none still reports its preemptions, quanta,
         # and committed tokens (they live in req.out across requeues);
@@ -125,7 +132,8 @@ class QueueStats:
         extras = dict(
             n_retries=sum(t.retries for t in tickets), n_shed=n_shed,
             n_quarantined=n_quarantined,
-            n_unfinished=sum(1 for t in tickets if t.t_done is None))
+            n_unfinished=sum(1 for t in tickets if t.t_done is None),
+            device_wait_s=device_wait_s)
         done = [t for t in tickets if t.t_done is not None]
         if not done:
             return cls(0, n_preempt, tokens, quanta, 0.0, 0.0,
@@ -212,12 +220,33 @@ class TPFIFODriver:
         self.quarantined: set = set()            # slot keys out of service
         self._slot_strikes: dict = {}            # slot key -> consecutive fails
         self.admission_order: list[Any] = []     # rids, in admission order
+        self.device_wait_s = 0.0                 # host blocked on readback
         self._t0 = time.perf_counter()
         self._ticks = 0
 
     # -- clock / queue ----------------------------------------------------
     def _now(self) -> float:
         return time.perf_counter() - self._t0
+
+    @contextlib.contextmanager
+    def _device_wait(self, what: str, rid=None):
+        """Account (and trace) a host block on device readback.
+
+        Wrap every ``block_until_ready`` / ``np.asarray``-of-device-buffer
+        on the serving path in one of these: ``stats().device_wait_s`` and
+        the Perfetto ``device_wait`` spans are how the pipelining win is
+        MEASURED rather than inferred (DESIGN.md §18).
+        """
+        args = {"what": what}
+        if rid is not None:
+            args["rid"] = rid
+        t0 = time.perf_counter()
+        with (self.tracer.span("device_wait", args) if self.tracer
+              else contextlib.nullcontext()):
+            try:
+                yield
+            finally:
+                self.device_wait_s += time.perf_counter() - t0
 
     def _queue_load(self, req) -> int:
         """Pending requests competing with ``req`` for admission (the
@@ -605,7 +634,8 @@ class TPFIFODriver:
         live = [t for t in self.active if t is not None]
         return QueueStats.from_tickets(
             self.finished_tickets + live + list(self.queue),
-            n_shed=len(self.shed), n_quarantined=len(self.quarantined))
+            n_shed=len(self.shed), n_quarantined=len(self.quarantined),
+            device_wait_s=self.device_wait_s)
 
 
 # ---------------------------------------------------------- jitted quantum ----
@@ -830,8 +860,11 @@ class TPFIFOEngine(TPFIFODriver):
             self.params, self._state, self.cache, k,
             jnp.asarray(m, jnp.int32), jnp.asarray(self.eos_id, jnp.int32),
             mcfg=self.cfg, temperature=self.temperature)
-        live = np.asarray(self._state.live)
-        gen = np.asarray(self._state.gen)
+        # the tick's only mandatory readback: two (B,) scalar vectors the
+        # scheduler needs; token rows stay on device until retire/preempt
+        with self._device_wait("lane_summary"):
+            live = np.asarray(self._state.live)
+            gen = np.asarray(self._state.gen)
 
         served = 0
         for s, t in enumerate(self.active):

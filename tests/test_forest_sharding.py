@@ -1,0 +1,195 @@
+"""Ensemble-axis sharding: padding math, pad-member inertness, and
+sharded-vs-unsharded bit-identity.
+
+The multi-device cases skip unless the process sees >= 2 JAX devices;
+CI runs this file a second time under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the shard_map
+path is exercised for real (see .github/workflows/ci.yml)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hex as hx
+from repro.core.gscpm import GSCPMConfig, fold_task_keys
+from repro.core.root_parallel import (
+    check_forest_invariants,
+    ensemble_mesh,
+    ensemble_sharding,
+    forest_summary,
+    gscpm_search_batch,
+    merged_root_stats,
+    pad_forest_members,
+)
+from repro.core.tree import forest_size, init_forest, reroot_forest
+
+SIZE = 5
+N_MOVES = SIZE * SIZE
+N_DEV = len(jax.devices())
+
+multi_device = pytest.mark.skipif(
+    N_DEV < 2, reason="needs >=2 devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+def cfg(**kw):
+    base = dict(board_size=SIZE, n_playouts=96, n_tasks=8, n_workers=4,
+                tree_cap=768, select_noise=1e-3)
+    base.update(kw)
+    return GSCPMConfig(**base)
+
+
+# ------------------------------------------------------------- padding math ----
+def test_ensemble_sharding_defaults_to_visible_devices():
+    sharding, padded = ensemble_sharding(5, mesh=None)
+    if N_DEV == 1:
+        assert sharding is None and padded == 5     # no mesh -> identity
+    else:
+        assert sharding is not None
+        assert padded % N_DEV == 0 and padded >= 5
+
+
+def test_single_device_has_no_mesh():
+    if N_DEV == 1:
+        assert ensemble_mesh() is None
+    else:
+        assert ensemble_mesh() is not None
+
+
+@multi_device
+def test_ensemble_sharding_pads_to_next_device_multiple():
+    mesh = ensemble_mesh()
+    for n in range(1, 2 * N_DEV + 1):
+        sharding, padded = ensemble_sharding(n, mesh)
+        assert sharding is not None
+        assert padded % N_DEV == 0 and padded >= n
+        assert padded - n < N_DEV          # NEXT multiple, not a later one
+
+
+def test_pad_forest_members_appends_inert_init_trees():
+    c = cfg()
+    forest = init_forest(3, c.tree_cap, N_MOVES, 1)
+    boards = jnp.tile(hx.empty_board(hx.HexSpec(SIZE))[None, :], (3, 1))
+    pf, pb = pad_forest_members(forest, boards, 5, c, 1)
+    assert forest_size(pf) == 5 and pb.shape[0] == 5
+    # pad members are freshly initialized trees: a single root, no stats
+    assert np.asarray(pf.n_nodes[3:]).tolist() == [1, 1]
+    assert float(np.asarray(pf.visits[3:]).sum()) == 0.0
+    # real members are untouched
+    np.testing.assert_array_equal(np.asarray(pf.visits[:3]),
+                                  np.asarray(forest.visits))
+
+
+# ---------------------------------------------------------- bit-identity ----
+@multi_device
+def test_sharded_batch_bit_identical_to_unsharded():
+    """The whole tentpole contract: shard_map over the ensemble mesh (with
+    padding when E % n_devices != 0) changes NOTHING about the answer —
+    merged stats, per-member stats, and the forest summary are bitwise
+    equal to the single-device vmap path."""
+    board = hx.empty_board(hx.HexSpec(SIZE))
+    e = N_DEV - 1              # forces padding
+    c = cfg(n_playouts=128)
+    f_off, s_off = gscpm_search_batch(board, 1, c, jax.random.PRNGKey(7),
+                                      n_trees=e, shard="off")
+    f_on, s_on = gscpm_search_batch(board, 1, c, jax.random.PRNGKey(7),
+                                    n_trees=e, shard="require")
+    assert s_off["sharded"] is False and s_on["sharded"] is True
+    assert s_on["n_devices"] == N_DEV
+    assert s_on["mesh_shape"] == {"ens": N_DEV}
+    assert s_on["padded_members"] == N_DEV - e
+    assert forest_size(f_on) == e           # pads sliced off before return
+    for a, b in zip(jax.tree.leaves(f_off), jax.tree.leaves(f_on)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for k in ("best_move_sum", "best_move_vote", "member_best_moves",
+              "tree_nodes", "playouts"):
+        assert s_off[k] == s_on[k], k
+    check_forest_invariants(f_on)
+
+
+@multi_device
+def test_sharded_periodic_sync_bit_identical():
+    """sync_root_stats is the ONLY cross-shard exchange; its delta-tracked
+    merge must stay exact when the forest lives on a mesh."""
+    board = hx.empty_board(hx.HexSpec(SIZE))
+    c = cfg(n_playouts=128, n_tasks=16)
+    f_off, s_off = gscpm_search_batch(board, 1, c, jax.random.PRNGKey(8),
+                                      n_trees=3, merge_every=1, shard="off")
+    f_on, s_on = gscpm_search_batch(board, 1, c, jax.random.PRNGKey(8),
+                                    n_trees=3, merge_every=1,
+                                    shard="require")
+    assert s_on["n_syncs"] == s_off["n_syncs"] >= 2
+    mv_off, mw_off = merged_root_stats(f_off, N_MOVES)
+    mv_on, mw_on = merged_root_stats(f_on, N_MOVES)
+    np.testing.assert_array_equal(np.asarray(mv_off), np.asarray(mv_on))
+    np.testing.assert_array_equal(np.asarray(mw_off), np.asarray(mw_on))
+    # after the final sync every member's root carries the ensemble total
+    np.testing.assert_allclose(np.asarray(f_on.visits[:, 0]),
+                               float(s_on["playouts"]))
+    summ_off = jax.device_get(forest_summary(f_off, N_MOVES))
+    summ_on = jax.device_get(forest_summary(f_on, N_MOVES))
+    for k in summ_off:
+        np.testing.assert_array_equal(np.asarray(summ_off[k]),
+                                      np.asarray(summ_on[k]), err_msg=k)
+
+
+@multi_device
+def test_sharded_metrics_bit_identical():
+    board = hx.empty_board(hx.HexSpec(SIZE))
+    c = cfg(metrics=True)
+    _, s_off = gscpm_search_batch(board, 1, c, jax.random.PRNGKey(9),
+                                  n_trees=2, shard="off")
+    _, s_on = gscpm_search_batch(board, 1, c, jax.random.PRNGKey(9),
+                                 n_trees=2, shard="require")
+    assert s_off["metrics"] == s_on["metrics"]
+
+
+def test_shard_require_raises_on_single_device():
+    if N_DEV > 1:
+        pytest.skip("only meaningful with one device")
+    board = hx.empty_board(hx.HexSpec(SIZE))
+    with pytest.raises(RuntimeError, match="require"):
+        gscpm_search_batch(board, 1, cfg(), jax.random.PRNGKey(0),
+                           n_trees=2, shard="require")
+
+
+# ------------------------------------------------------------------ reroot ----
+@multi_device
+def test_reroot_forest_round_trip_under_sharding():
+    """Search sharded -> re-root every member -> warm-continue sharded:
+    the whole cross-move loop survives device placement, bit-identical to
+    the unsharded loop."""
+    board = hx.empty_board(hx.HexSpec(SIZE))
+    c = cfg(n_playouts=96)
+
+    def loop(shard):
+        forest, stats = gscpm_search_batch(
+            board, 1, c, jax.random.PRNGKey(11), n_trees=2, shard=shard)
+        mv, _ = merged_root_stats(forest, N_MOVES)
+        move = int(jnp.argmax(mv))
+        warm = reroot_forest(forest, move)
+        nb = jnp.tile(board[None, :].at[:, move].set(1), (2, 1))
+        forest2, stats2 = gscpm_search_batch(
+            nb, 2, c, jax.random.PRNGKey(12), forest=warm, shard=shard)
+        return forest2, move
+
+    f_off, m_off = loop("off")
+    f_on, m_on = loop("require")
+    assert m_off == m_on
+    for a, b in zip(jax.tree.leaves(f_off), jax.tree.leaves(f_on)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------- key streams ----
+def test_member_key_streams_ignore_padding():
+    """Real members' RNG streams must not depend on how far the ensemble
+    was padded — fold_task_keys(key, arange(Ep))[:E] == fold over arange(E),
+    which is what makes padded and unpadded runs bit-identical."""
+    key = jax.random.key(5)
+    a = fold_task_keys(key, jnp.arange(3, dtype=jnp.int32))
+    b = fold_task_keys(key, jnp.arange(8, dtype=jnp.int32))[:3]
+    np.testing.assert_array_equal(jax.random.key_data(a),
+                                  jax.random.key_data(b))

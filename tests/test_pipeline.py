@@ -1,0 +1,142 @@
+"""Async round pipelining (DESIGN.md §18): bit-identity with the blocking
+engine, zero recompiles, clean auto-disable, and device-wait accounting.
+
+Uses the UNIQUE class combo (board 5, cap 640) so the zero-recompile
+pins isolate pipelining from compilation triggered by other test files
+sharing this process's jit cache."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.gscpm import run_chunk
+from repro.obsv.trace import TraceRecorder
+from repro.serve.games import GameRequest, TPFIFOGameEngine
+from repro.serve.resilience import FaultInjector, FaultPlan
+
+SIZE = 5
+CAP = 640
+
+
+def engine(pipeline=None, n_slots=2, **kw):
+    return TPFIFOGameEngine(n_slots=n_slots, grain=2, preempt_quanta=2,
+                            n_workers=4, tree_cap=CAP, pipeline=pipeline,
+                            **kw)
+
+
+def submit_mix(eng, n=6):
+    for i in range(n):
+        eng.submit(GameRequest(rid=i, game=["hex", "gomoku"][i % 2],
+                               board_size=SIZE, n_playouts=48 + 16 * (i % 3),
+                               n_tasks=8, seed=i))
+
+
+# ------------------------------------------------------------ bit-identity ----
+def test_pipelined_bit_identical_to_blocking_and_zero_recompiles():
+    """EVERY retired request answers bitwise-identically whether its
+    retirement readback blocked inline or was deferred a tick — and the
+    pipelined run compiles nothing new (same quantum programs, same
+    summary program)."""
+    blocking = engine(pipeline=False)
+    submit_mix(blocking)
+    blocking.run()
+    assert blocking.pipeline is False
+    before = run_chunk._cache_size()
+
+    pipelined = engine(pipeline=True)
+    submit_mix(pipelined)
+    pipelined.run()
+    assert pipelined.pipeline is True
+    assert run_chunk._cache_size() == before    # zero recompiles
+
+    ra = {r.rid: r.result for r in blocking.finished}
+    rb = {r.rid: r.result for r in pipelined.finished}
+    assert set(ra) == set(rb) == set(range(6))
+    for rid in ra:
+        np.testing.assert_array_equal(ra[rid]["root_visits"],
+                                      rb[rid]["root_visits"])
+        np.testing.assert_array_equal(ra[rid]["root_wins"],
+                                      rb[rid]["root_wins"])
+        assert ra[rid]["best_move"] == rb[rid]["best_move"]
+        assert ra[rid]["playouts"] == rb[rid]["playouts"]
+        assert ra[rid]["rounds"] == rb[rid]["rounds"]
+        assert ra[rid]["status"] == rb[rid]["status"]
+
+
+def test_pipelined_default_on_and_drains_pending():
+    """Pipelining is the default; run() must not exit with a retirement
+    still deferred — every submitted request finishes answered."""
+    eng = engine()                              # pipeline=None -> on
+    assert eng.pipeline is True
+    submit_mix(eng, n=5)
+    eng.run()
+    assert not eng._pending_retire
+    assert not eng.has_work()
+    assert len(eng.finished) == 5
+    assert all(r.result["status"] == "answered" for r in eng.finished)
+
+
+# ------------------------------------------------------------- auto-disable ----
+def test_pipeline_auto_disables_under_observers_and_chaos():
+    assert engine(pipeline=True, tracer=TraceRecorder()).pipeline is False
+    plan = FaultPlan.generate(seed=1, n_ticks=10, n_slots=2, rate=0.1)
+    inj = FaultInjector(plan)
+    assert engine(pipeline=True, injector=inj).pipeline is False
+    assert engine(pipeline=True, snapshots=True).pipeline is False
+    assert engine(pipeline=True).pipeline is True
+
+
+# --------------------------------------------------------- device accounting ----
+def test_device_wait_recorded_in_stats():
+    eng = engine(pipeline=False)
+    submit_mix(eng, n=3)
+    eng.run()
+    qs = eng.stats()
+    assert qs.device_wait_s > 0.0               # retirements blocked inline
+    assert "device_wait_s" in qs.as_dict()
+
+
+def test_forest_request_served_matches_batch_search():
+    """A FOREST tenant (n_trees > 1) through the pipelined engine answers
+    exactly what the standalone batch search answers for the same seed."""
+    import jax
+
+    from repro.core.root_parallel import gscpm_search_batch, merged_root_stats
+
+    eng = engine()
+    eng.submit(GameRequest(rid=0, game="hex", board_size=SIZE,
+                           n_playouts=48, n_tasks=8, seed=3, n_trees=3))
+    eng.run()
+    res = eng.finished[0].result
+    assert res["n_trees"] == 3
+    assert res["playouts"] == 3 * 48
+
+    cfg = eng.request_cfg(GameRequest(rid=0, game="hex", board_size=SIZE,
+                                      n_playouts=48, n_tasks=8, seed=3,
+                                      n_trees=3))
+    from repro.core import hex as hx
+    board = hx.empty_board(hx.HexSpec(SIZE))
+    forest, stats = gscpm_search_batch(board, 1, cfg, jax.random.key(3),
+                                       n_trees=3, shard="auto")
+    mv, mw = merged_root_stats(forest, SIZE * SIZE)
+    np.testing.assert_array_equal(res["root_visits"], np.asarray(mv))
+    np.testing.assert_array_equal(res["root_wins"], np.asarray(mw))
+    assert res["best_move"] == stats["best_move_sum"]
+    assert res["best_move_vote"] == stats["best_move_vote"]
+    assert res["member_best_moves"] == stats["member_best_moves"]
+
+
+def test_forest_request_rejects_sessions_and_bad_widths():
+    eng = engine()
+    with pytest.raises(ValueError):
+        eng.submit(GameRequest(rid=1, game="hex", board_size=SIZE,
+                               n_playouts=16, n_tasks=8, seed=0, n_trees=0))
+    with pytest.raises(ValueError):
+        eng.submit(GameRequest(rid=2, game="hex", board_size=SIZE,
+                               n_playouts=16, n_tasks=8, seed=0,
+                               n_trees=True))
+    with pytest.raises(ValueError):
+        eng.submit(GameRequest(rid=3, game="hex", board_size=SIZE,
+                               n_playouts=16, n_tasks=8, seed=0,
+                               n_trees=2, session=object()))
